@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def bench(name: str, fn: Callable[[], object], *, repeat: int = 1) -> object:
+    """Time ``fn`` and record a CSV row; returns fn's result."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn()
+    us = (time.perf_counter() - t0) * 1e6 / repeat
+    derived = out if isinstance(out, str) else getattr(out, "derived", "")
+    ROWS.append((name, us, str(derived)))
+    return out
+
+
+def emit(row_name: str, us: float, derived: str) -> None:
+    ROWS.append((row_name, us, derived))
+
+
+def flush() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in ROWS:
+        print(f"{name},{us:.1f},{derived}")
+    ROWS.clear()

@@ -1,0 +1,33 @@
+"""TPU-pod roofline table (deliverable g) from dry-run artifacts.
+
+Reads ``artifacts/dryrun/*.json`` produced by ``repro.launch.dryrun`` and
+reports the three roofline terms per (arch x shape x mesh). Skips quietly if
+no artifacts exist yet (run the dry-run first).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run(emit) -> str:
+    if not ART.exists():
+        return "no dry-run artifacts (run repro.launch.dryrun first)"
+    n = 0
+    worst = ("", 0.0)
+    for p in sorted(ART.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if "roofline" not in rec or rec.get("tag"):
+            continue  # tagged records are SSPerf hillclimb variants
+        r = rec["roofline"]
+        emit(f"roofline.{p.stem}", 0.0,
+             f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+             f"collective={r['collective_s']:.2e}s bott={r['bottleneck']} "
+             f"useful={r['model_flops_ratio']:.2f}")
+        n += 1
+        frac = r.get("roofline_fraction", 0.0)
+        if worst[0] == "" or frac < worst[1]:
+            worst = (p.stem, frac)
+    return f"{n} cells; worst_roofline_fraction={worst[0]}:{worst[1]:.2f}"

@@ -1,0 +1,58 @@
+"""Summarize artifacts/dryrun/*.json into the SSDry-run / SSRoofline tables."""
+import json
+import pathlib
+import sys
+
+ART = pathlib.Path("artifacts/dryrun")
+
+rows = []
+for p in sorted(ART.glob("*.json")):
+    r = json.loads(p.read_text())
+    if r.get("tag"):
+        continue
+    rows.append(r)
+
+def fmt(x, d=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e4:
+        return f"{x:.1e}"
+    return f"{x:.{d}f}"
+
+print("| arch | shape | mesh | status | peak GiB/dev | compute_s | memory_s "
+      "| collective_s | bottleneck | useful-FLOPs | roofline-frac |")
+print("|---|---|---|---|---|---|---|---|---|---|---|")
+for r in rows:
+    mesh = r["mesh"].replace("pod", "")
+    if "skipped" in r:
+        print(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP | - | - | - | - "
+              f"| - | - | - |")
+        continue
+    if "error" in r:
+        print(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | - | - | - | -"
+              f" | - | - | - |")
+        continue
+    ro = r["roofline"]
+    peak = r["memory"]["peak_bytes"] / 2**30
+    print(f"| {r['arch']} | {r['shape']} | {mesh} | ok | {peak:.2f} "
+          f"| {fmt(ro['compute_s'])} | {fmt(ro['memory_s'])} "
+          f"| {fmt(ro['collective_s'])} | {ro['bottleneck']} "
+          f"| {fmt(ro['model_flops_ratio'])} "
+          f"| {fmt(ro['roofline_fraction'])} |")
+
+# quick picks for the hillclimb
+single = [r for r in rows if r["mesh"] == "pod16x16" and "roofline" in r]
+by_frac = sorted(single, key=lambda r: r["roofline"]["roofline_fraction"])
+coll = sorted((r for r in single if r["roofline"]["bottleneck"] == "collective"),
+              key=lambda r: -r["roofline"]["collective_s"])
+print("\nWorst roofline fraction (single-pod):", file=sys.stderr)
+for r in by_frac[:6]:
+    print(f"  {r['arch']} x {r['shape']}: frac="
+          f"{r['roofline']['roofline_fraction']:.4f} "
+          f"bott={r['roofline']['bottleneck']}", file=sys.stderr)
+print("Most collective-bound:", file=sys.stderr)
+for r in coll[:6]:
+    print(f"  {r['arch']} x {r['shape']}: coll_s="
+          f"{r['roofline']['collective_s']:.3f}", file=sys.stderr)

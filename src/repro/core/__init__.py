@@ -1,0 +1,29 @@
+"""The paper's primary contribution: a hierarchical, latency-aware roofline
+performance model for gen-AI inference over emerging memory technologies
+(HBS, bonded SRAM chiplet), plus its TPU-pod retargeting used by the
+dry-run roofline deliverable."""
+from repro.core import (memspec, placement, roofline, stco, tiling,
+                        tpu_roofline, workload)
+from repro.core.memspec import (ComputeSpec, MemoryHierarchy, MemoryLevel,
+                                hbs, lpddr6, npu_hierarchy, sram_chiplet,
+                                ssd_pcie, tpu_v5e_hierarchy)
+from repro.core.placement import (Placement, all_hbs, capacity_aware,
+                                  chiplet_mlp_weights, chiplet_qkv, ddr_only,
+                                  make_placement, qkv_in_ddr)
+from repro.core.roofline import (InferenceReport, KernelTime, PhaseReport,
+                                 kernel_time, phase_time, run_inference)
+from repro.core.workload import (TC, Kernel, Phase, decode_phase,
+                                 prefill_phase, resident_bytes)
+
+__all__ = [
+    "memspec", "placement", "roofline", "stco", "tiling",
+    "tpu_roofline", "workload",
+    "ComputeSpec", "MemoryHierarchy", "MemoryLevel", "hbs", "lpddr6",
+    "npu_hierarchy", "sram_chiplet", "ssd_pcie", "tpu_v5e_hierarchy",
+    "Placement", "all_hbs", "capacity_aware", "chiplet_mlp_weights",
+    "chiplet_qkv", "ddr_only", "make_placement", "qkv_in_ddr",
+    "InferenceReport", "KernelTime", "PhaseReport", "kernel_time",
+    "phase_time", "run_inference",
+    "TC", "Kernel", "Phase", "decode_phase", "prefill_phase",
+    "resident_bytes",
+]

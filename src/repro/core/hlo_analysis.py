@@ -1,0 +1,340 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE, so a
+``lax.scan`` over 60 layers reports 1/60th of the real FLOPs. This module
+parses post-SPMD HLO text, finds ``while`` trip counts (scan upper bounds
+are integer constants in the condition computation), and accumulates
+
+    flops             (dot ops: 2 * prod(out) * prod(contracting))
+    bytes             (operands + outputs at fusion/instruction boundaries)
+    collective_bytes  (all-gather / all-reduce / reduce-scatter /
+                       all-to-all / collective-permute result bytes)
+
+All values are PER-DEVICE (post-partitioning shapes).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum bytes over every array shape appearing in a type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_type(expr: str) -> str:
+    """The result type at the start of an instruction RHS."""
+    depth, out = 0, []
+    for ch in expr:
+        if ch == "(" and depth == 0 and out and out[-1] != " ":
+            break  # reached op args
+        out.append(ch)
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if depth == 0 and ch == ")":
+            break
+        if ch == " " and depth == 0:
+            break
+    return "".join(out)
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_type: str
+    operand_types: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+    def operand_bytes(self, ins: Instr) -> float:
+        total = 0.0
+        for o in ins.operand_types:
+            nm = o.lstrip("%")
+            total += _shape_bytes(self.types.get(nm, o))
+        return total
+
+    def operand_shape(self, ins: Instr, idx: int) -> str:
+        if idx >= len(ins.operand_types):
+            return ""
+        o = ins.operand_types[idx]
+        return self.types.get(o.lstrip("%"), o)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^=]*?\))|(?:[\w\[\],:{}\s]*?))\s*([\w\-]+)\(")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("{" in line):
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if stripped == "}" or cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type: balanced-paren scan (tuple types contain
+        # /*index=N*/ comments and nested parens that defeat regexes)
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            depth, i = 0, 0
+            while i < len(rhs):
+                if rhs[i] == "(":
+                    depth += 1
+                elif rhs[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        i += 1
+                        break
+                i += 1
+            result_type = rhs[:i]
+            rest = rhs[i:].lstrip()
+        else:
+            sp = rhs.find(" ")
+            if sp < 0:
+                continue
+            result_type = rhs[:sp]
+            rest = rhs[sp + 1:].lstrip()
+        om = re.match(r"([\w\-]+)\(", rest)
+        if not om:
+            continue
+        op = om.group(1)
+        args_start = len(op) + 1
+        depth, i = 1, args_start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        args = rest[args_start:i - 1]
+        attrs = rest[i:]
+        ins = Instr(name, op, result_type,
+                    [a.strip() for a in args.split(",")], attrs)
+        cur.instrs.append(ins)
+        cur.types[name] = result_type
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the condition computation (scan bound)."""
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.op + "(" +
+                             ",".join(ins.operand_types) + ")" + ins.attrs):
+            best = max(best, int(m.group(1)))
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)",
+                          f"constant({ins.attrs})")
+        for m in re.finditer(r"s(?:32|64)\[\]\s*constant\((\d+)\)",
+                             ins.result_type + " " + ins.attrs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+
+
+def _dot_flops(ins: Instr, comp: "Computation") -> float:
+    out = 1.0
+    m = _SHAPE_RE.search(ins.result_type)
+    if m and m.group(2):
+        for d in m.group(2).split(","):
+            out *= int(d)
+    contract = 1.0
+    dm = _DOT_DIMS_RE.search(ins.attrs)
+    lhs_type = comp.operand_shape(ins, 0)
+    if dm and lhs_type:
+        lhs = _SHAPE_RE.search(lhs_type)
+        if lhs and lhs.group(2):
+            dims = [int(d) for d in lhs.group(2).split(",")]
+            for ci in filter(None, dm.group(1).split(",")):
+                i = int(ci)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * out * contract
+
+
+def _fusion_bytes(fused: Computation, caller: Computation, ins: Instr,
+                  out_b: float) -> float:
+    """HBM traffic of one fusion = what its boundary actually moves.
+
+    A loop fusion often takes a whole scan-stacked array as an operand and
+    dynamic-slices ONE layer inside — the read is slice-sized, not
+    stack-sized. Similarly a dynamic-update-slice root writes (and keeps
+    in place) only the update region."""
+    # map parameter index -> bytes actually read
+    param_read: Dict[int, float] = {}
+    param_of: Dict[str, int] = {}
+    for i, fins in enumerate(fused.instrs):
+        if fins.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)",
+                          f"{fins.op}({','.join(fins.operand_types)})")
+            idx = int(fins.operand_types[0]) if fins.operand_types and \
+                fins.operand_types[0].isdigit() else len(param_of)
+            param_of[fins.name] = idx
+            param_read[idx] = _shape_bytes(fins.result_type)
+    for fins in fused.instrs:
+        if fins.op in ("dynamic-slice", "gather"):
+            src = fins.operand_types[0].lstrip("%") if fins.operand_types \
+                else ""
+            if src in param_of:
+                param_read[param_of[src]] = min(
+                    param_read[param_of[src]],
+                    2 * _shape_bytes(fins.result_type))
+    root = fused.instrs[-1] if fused.instrs else None
+    write_b = out_b
+    if root is not None and root.op == "dynamic-update-slice":
+        upd = (_shape_bytes(fused.operand_shape(root, 1))
+               if len(root.operand_types) > 1 else out_b)
+        write_b = upd
+        # the aliased big operand is not re-read either
+        tgt = root.operand_types[0].lstrip("%") if root.operand_types else ""
+        if tgt in param_of:
+            param_read[param_of[tgt]] = upd
+    return sum(param_read.values()) + write_b
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, HloCosts] = {}
+
+    def visit(name: str) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCosts()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        c = HloCosts(collective_counts={})
+        for ins in comp.instrs:
+            out_b = _shape_bytes(ins.result_type)
+            in_b = comp.operand_bytes(ins)
+            if ins.op == "dot":
+                c.flops += _dot_flops(ins, comp)
+                c.bytes += in_b + out_b
+            elif ins.op in ("dynamic-slice",):
+                # reads only the slice; the big operand is not streamed
+                c.bytes += 2 * out_b
+            elif ins.op in ("dynamic-update-slice", "scatter"):
+                # XLA aliases the target buffer in place inside loops:
+                # traffic = the update region (r+w), not the whole buffer
+                upd = (_shape_bytes(comp.operand_shape(ins, 1))
+                       if len(ins.operand_types) > 1 else out_b)
+                c.bytes += 2 * upd
+            elif ins.op == "gather":
+                c.bytes += 2 * out_b
+            elif ins.op in ("fusion", "custom-call", "convolution"):
+                fm = (re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                      if ins.op == "fusion" else None)
+                if fm and fm.group(1) in comps:
+                    c.bytes += _fusion_bytes(comps[fm.group(1)], comp, ins,
+                                             out_b)
+                else:
+                    c.bytes += in_b + out_b
+                # approximate fused flops: elementwise ~= output elements
+                c.flops += out_b
+                if fm:
+                    c.flops += visit_fused_dots(fm.group(1))
+            elif ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps[cm.group(1)]) if (
+                        cm and cm.group(1) in comps) else 1
+                if bm and bm.group(1) in comps:
+                    sub = visit(bm.group(1))
+                    c.flops += sub.flops * trip
+                    c.bytes += sub.bytes * trip
+                    c.collective_bytes += sub.collective_bytes * trip
+                    for k, v in sub.collective_counts.items():
+                        c.collective_counts[k] = (c.collective_counts.get(k, 0)
+                                                  + v * trip)
+            elif ins.op in ("call", "conditional", "async-start"):
+                for cm in re.finditer(
+                        r"(?:to_apply|called_computations?|branch_computations)"
+                        r"=\{?%?([\w.\-]+)", ins.attrs):
+                    sub = visit(cm.group(1))
+                    c.flops += sub.flops
+                    c.bytes += sub.bytes
+                    c.collective_bytes += sub.collective_bytes
+            elif any(ins.op.startswith(col) for col in _COLLECTIVES):
+                c.collective_bytes += out_b
+                c.bytes += in_b + out_b
+                kind = next(col for col in _COLLECTIVES
+                            if ins.op.startswith(col))
+                c.collective_counts[kind] = (
+                    c.collective_counts.get(kind, 0) + out_b)
+            elif ins.op in ("parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast"):
+                continue
+            else:
+                c.bytes += in_b + out_b
+        memo[name] = c
+        return c
+
+    def visit_fused_dots(name: str) -> float:
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0
+        return sum(_dot_flops(ins, comp) for ins in comp.instrs
+                   if ins.op == "dot")
+
+    return visit(entry)

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels with XLA fallbacks.
+
+``try_*`` functions return ``None`` when the kernel is not eligible for the
+given shapes/backend so callers can fall back to the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pallas_ok() -> bool:
+    """Pallas TPU kernels lower only on TPU; interpret mode covers CPU."""
+    if os.environ.get("REPRO_DISABLE_PALLAS"):
+        return False
+    return True
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def try_flash_attention(q, k, v, *, mask_kind: str, window: int = 0,
+                        prefix_len: int = 0, q_offset=0, kv_valid=None,
+                        scale: float = 1.0, softcap: float = 0.0
+                        ) -> Optional[jax.Array]:
+    """Route to the Pallas flash kernel when shapes/masks are eligible."""
+    if not _pallas_ok():
+        return None
+    B, S, H, dh = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    if mask_kind not in ("causal", "full") or softcap or kv_valid is not None:
+        return None
+    if S < 128 or L < 128 or dh % 128 != 0 or H % Hkv != 0:
+        return None
+    if isinstance(q_offset, jax.Array) or q_offset != 0 or S != L:
+        return None
+    from repro.kernels.flash_attention import flash_attention
+    return flash_attention(q, k, v, causal=(mask_kind == "causal"),
+                           scale=scale, interpret=_interpret())
+
+
+def try_decode_attention(q, k_cache, v_cache, kv_valid, *, scale: float,
+                         k_scale=None, v_scale=None) -> Optional[jax.Array]:
+    """Route to the Pallas decode-attention kernel (bf16 or int8 KV)."""
+    if not _pallas_ok():
+        return None
+    B, H, dh = q.shape
+    L, Hkv = k_cache.shape[1], k_cache.shape[2]
+    if dh % 128 != 0 and dh not in (64, 128, 256):
+        return None
+    if L % 128 != 0 or H % Hkv != 0:
+        return None
+    from repro.kernels.decode_attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, kv_valid, scale=scale,
+                            k_scale=k_scale, v_scale=v_scale,
+                            interpret=_interpret())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float = 1.0):
+    """q: (B,S,H,dh); k/v: (B,L,Hkv,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, S, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bshgd,blhd->bhgsl", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(L)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgsl,blhd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_valid, *, scale: float,
+                         k_scale=None, v_scale=None):
+    """q: (B,H,dh); k/v_cache: (B,L,Hkv,dh) [int8 when scales given];
+    kv_valid: (B,) valid lengths -> (B,H,dh)."""
+    B, H, dh = q.shape
+    L, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[None, None, :, None]
+    if v_scale is not None:
+        vf = vf * v_scale[None, None, :, None]
+    qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, kf) * scale
+    valid = jnp.arange(L)[None, None, None, :] < kv_valid[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgl,blhd->bhgd", p, vf)
+    return o.reshape(B, H, dh).astype(q.dtype)

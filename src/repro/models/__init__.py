@@ -1,0 +1,9 @@
+"""Pure-JAX model zoo: dense/GQA, MLA, MoE, SSM (SSD), hybrid, enc-dec, VLM."""
+from repro.models.api import (RuntimeOptions, SHAPES, ShapeSpec,
+                              cell_runnable, decode_step, forward, init_cache,
+                              init_params, input_specs, module_for, prefill,
+                              train_loss)
+
+__all__ = ["RuntimeOptions", "SHAPES", "ShapeSpec", "cell_runnable",
+           "decode_step", "forward", "init_cache", "init_params",
+           "input_specs", "module_for", "prefill", "train_loss"]

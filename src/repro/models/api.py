@@ -1,0 +1,108 @@
+"""Uniform model API: dispatches on ``ArchConfig.family``.
+
+    init_params / forward / train_loss / init_cache / prefill / decode_step
+    input_specs(cfg, shape)  -> ShapeDtypeStruct stand-ins for the dry-run
+
+Families: dense | moe | vlm -> lm.py;  ssm -> mamba_lm.py;
+          hybrid -> zamba.py;  encdec -> whisper.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm, mamba_lm, whisper, zamba
+from repro.models.lm import RuntimeOptions
+
+_MODS = {"dense": lm, "moe": lm, "vlm": lm, "ssm": mamba_lm,
+         "hybrid": zamba, "encdec": whisper}
+
+
+def module_for(cfg: ArchConfig):
+    return _MODS[cfg.family]
+
+
+def init_params(cfg, key, opts: RuntimeOptions = RuntimeOptions()):
+    return module_for(cfg).init_params(cfg, key, opts)
+
+
+def forward(cfg, params, tokens, opts=RuntimeOptions(), prefix_emb=None):
+    return module_for(cfg).forward(cfg, params, tokens, opts,
+                                   prefix_emb=prefix_emb)
+
+
+def train_loss(cfg, params, batch, opts=RuntimeOptions()):
+    return module_for(cfg).train_loss(cfg, params, batch, opts)
+
+
+def init_cache(cfg, batch, max_len, opts=RuntimeOptions()):
+    return module_for(cfg).init_cache(cfg, batch, max_len, opts)
+
+
+def prefill(cfg, params, tokens, cache, opts=RuntimeOptions(),
+            prefix_emb=None):
+    return module_for(cfg).prefill(cfg, params, tokens, cache, opts,
+                                   prefix_emb=prefix_emb)
+
+
+def decode_step(cfg, params, token, pos, cache, opts=RuntimeOptions()):
+    return module_for(cfg).decode_step(cfg, params, token, pos, cache, opts)
+
+
+# --------------------------- input specs ------------------------------- #
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One cell of the assigned (arch x shape) grid."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_runnable(cfg: ArchConfig, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape == "long_500k" and not cfg.has_subquadratic_context:
+        return ("full-attention KV at 500k ctx (sub-quadratic required; "
+                "see DESIGN.md SS5)")
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: str, opts=RuntimeOptions()) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train: {"tokens","labels"[, "prefix_emb"]}
+    prefill: {"tokens"[, "prefix_emb"]}
+    decode: {"token", "pos"} (cache/params provided separately by the
+    launcher via jax.eval_shape over init fns)."""
+    sp = SHAPES[shape]
+    B = sp.global_batch
+    dt = opts.jdtype
+    i32 = jnp.int32
+    S = sp.seq_len
+    if sp.kind in ("train", "prefill"):
+        text_len = S - (cfg.prefix_len or 0) if cfg.family == "vlm" else S
+        d = {"tokens": jax.ShapeDtypeStruct((B, text_len), i32)}
+        if sp.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, text_len), i32)
+        if cfg.family == "vlm":
+            d["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.prefix_len, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            d["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.source_len, cfg.d_model), dt)
+        return d
+    return {"token": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}

@@ -1,0 +1,457 @@
+"""Unified decoder-only LM covering dense/GQA, MLA, MoE, local:global and
+prefix-LM architectures — pure JAX, layer stacks executed with ``lax.scan``
+(identical-shape layers are stacked; shape-divergent prefix layers, e.g.
+DeepSeek-V2's first dense layer, run unscanned).
+
+Public surface (used by launch/serving/tests):
+    init_params(cfg, key, opts)          -> params pytree
+    forward(cfg, params, tokens, opts[, prefix_emb])   -> logits
+    train_loss(cfg, params, batch, opts) -> (loss, metrics)
+    init_cache(cfg, batch, max_len, opts)-> cache pytree
+    prefill(cfg, params, tokens, cache, opts[, prefix_emb]) -> (logits, cache)
+    decode_step(cfg, params, token, pos, cache, opts)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+
+
+@dataclass(frozen=True)
+class RuntimeOptions:
+    dtype: str = "bfloat16"
+    attn_impl: str = "xla"          # xla | pallas
+    moe_impl: str = "capacity"      # capacity | ragged
+    remat: str = "none"             # none | block  (activation checkpointing)
+    cache_dtype: str = ""           # "" -> same as dtype; "int8" -> quantized
+    capacity_factor: float = 1.25
+    # flash-scan attention tiling knobs (hillclimb levers; SSPerf)
+    block_q: int = 512
+    block_kv: int = 1024
+    flash_acc: str = "float32"      # "bfloat16" halves carry HBM traffic
+    # NamedSharding for the (B, S, d) residual stream. Without an explicit
+    # constraint GSPMD propagation can drop the batch sharding entirely
+    # (observed: batch replicated, d_model model-sharded => 16x activation
+    # memory and redundant compute). Set by the launcher; None in tests.
+    residual_sharding: object = None
+    # MoE dispatch shardings (SSPerf): expert-major (E, C, d) tensors on
+    # "model" (EP all-to-all) and the combine buffer back on the batch axes
+    # (kills the replicated (T, d) f32 all-reduce, ~2.3 TB/step on arctic)
+    moe_expert_sharding: object = None
+    moe_out_sharding: object = None
+    # ZeRO-3 per-layer weight gathering (SSPerf iteration 3): tuple of
+    # (param path suffix, NamedSharding-without-data-axes); applied to the
+    # layer slice inside the scan body
+    zero3_gather: tuple = ()
+    # sequence-parallel decode attention (SSPerf iteration 2): manual
+    # shard_map update+attend for LENGTH-sharded caches — avoids GSPMD's
+    # full-cache all-gather on every decode step
+    seq_shard_attn: bool = False
+    seq_shard_mesh: object = None
+    # shard-local EP MoE dispatch (SSPerf iteration 4)
+    moe_shard_map_mesh: object = None
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ------------------------------ layers -------------------------------- #
+
+def _init_attn(key, cfg: ArchConfig, dtype):
+    H, Hkv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    b = cfg.qkv_bias
+    return {
+        "wq": cm.dense_init(ks[0], d, H * hd, dtype, bias=b),
+        "wk": cm.dense_init(ks[1], d, Hkv * hd, dtype, bias=b),
+        "wv": cm.dense_init(ks[2], d, Hkv * hd, dtype, bias=b),
+        "wo": cm.dense_init(ks[3], H * hd, d, dtype),
+    }
+
+
+def _init_layer(key, cfg: ArchConfig, dtype, *, is_moe: bool, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = _init_attn(k1, cfg, dtype)
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = moe_mod.init_dense_ffn(k3, cfg, d_ff, dtype)
+    return p
+
+
+def _layer_split(cfg: ArchConfig) -> Tuple[int, bool]:
+    """(n_unscanned_prefix_layers, stack_is_moe)."""
+    if cfg.moe is not None and cfg.moe.first_dense:
+        return cfg.moe.first_dense, True
+    return 0, cfg.moe is not None
+
+
+def _kind_array(cfg: ArchConfig, start: int, n: int):
+    """Per-layer attention kind: 0=global/causal, 1=local/sliding."""
+    kinds = [1 if cfg.attention_kind(start + i) == "local" else 0
+             for i in range(n)]
+    return jnp.asarray(kinds, jnp.int32)
+
+
+def init_params(cfg: ArchConfig, key, opts: RuntimeOptions = RuntimeOptions()):
+    dtype = opts.jdtype
+    n_pre, stack_moe = _layer_split(cfg)
+    n_stack = cfg.n_layers - n_pre
+    k_emb, k_pre, k_stack, k_out = jax.random.split(key, 4)
+    params = {"embed": cm.embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+              "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if n_pre:
+        dff = cfg.moe.d_ff_dense or cfg.d_ff
+        params["head_layers"] = [
+            _init_layer(k, cfg, dtype, is_moe=False, d_ff=dff)
+            for k in jax.random.split(k_pre, n_pre)]
+    params["stack"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype, is_moe=stack_moe, d_ff=cfg.d_ff)
+    )(jax.random.split(k_stack, n_stack))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_out, cfg.d_model, cfg.vocab,
+                                          dtype, scale=cfg.d_model ** -0.5)
+    return params
+
+
+# ----------------------------- forward -------------------------------- #
+
+def _attn_apply(p, x, cfg: ArchConfig, opts: RuntimeOptions, *, kind,
+                positions, mask_kind: str, prefix_len: int):
+    """Full-sequence attention (train/prefill). Returns out and (k, v)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = cm.dense(p["wq"], x).reshape(B, S, H, hd)
+    k = cm.dense(p["wk"], x).reshape(B, S, Hkv, hd)
+    v = cm.dense(p["wv"], x).reshape(B, S, Hkv, hd)
+    q = cm.apply_rope(q, positions)
+    k = cm.apply_rope(k, positions)
+
+    def run(mk, window):
+        return cm.attention(q, k, v, mask_kind=mk, window=window,
+                            prefix_len=prefix_len, softcap=cfg.logit_softcap,
+                            impl=opts.attn_impl, block_q=opts.block_q,
+                            block_kv=opts.block_kv, acc_dtype=opts.flash_acc)
+    if cfg.sliding_window and cfg.local_global_ratio:
+        # kind is traced (scanned layer): both branches built once in HLO
+        out = jax.lax.cond(
+            kind == 1,
+            lambda: run("sliding", cfg.sliding_window),
+            lambda: run(mask_kind, 0))
+    elif cfg.sliding_window:
+        out = run("sliding", cfg.sliding_window)
+    else:
+        out = run(mask_kind, 0)
+    out = cm.dense(p["wo"], out.reshape(B, S, H * hd))
+    return out, (k, v)
+
+
+def _ffn_apply(p, x, cfg: ArchConfig, opts: RuntimeOptions):
+    if "moe" in p:
+        y, aux = moe_mod.moe_ffn(p["moe"], x, cfg, impl=opts.moe_impl,
+                                 capacity_factor=opts.capacity_factor,
+                                 expert_sharding=opts.moe_expert_sharding,
+                                 out_sharding=opts.moe_out_sharding,
+                                 shard_map_mesh=opts.moe_shard_map_mesh)
+        return y, aux
+    return moe_mod.dense_ffn(p["mlp"], x, cfg.gated_mlp), {}
+
+
+def _block(p, x, cfg, opts, *, kind, positions, mask_kind, prefix_len):
+    x = cm.constrain(x, opts.residual_sharding)
+    p = cm.constrain_tree(p, opts.zero3_gather)
+    if cfg.mla is not None:
+        h, kv = mla_mod.mla_prefill_attn(p["attn"], cm.rms_norm(x, p["ln1"]),
+                                         cfg, positions, impl=opts.attn_impl)
+    else:
+        h, kv = _attn_apply(p["attn"], cm.rms_norm(x, p["ln1"]), cfg, opts,
+                            kind=kind, positions=positions,
+                            mask_kind=mask_kind, prefix_len=prefix_len)
+    x = x + h
+    h, aux = _ffn_apply(p, cm.rms_norm(x, p["ln2"]), cfg, opts)
+    return x + h, kv, aux
+
+
+def _logits(cfg, params, x):
+    x = cm.rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["emb"].T
+    return cm.dense(params["lm_head"], x)
+
+
+def _embed_tokens(cfg, params, tokens, prefix_emb):
+    x = params["embed"]["emb"][tokens]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma-style scale
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, tokens, opts: RuntimeOptions = RuntimeOptions(),
+            prefix_emb=None, *, collect_kv: bool = False,
+            return_hidden: bool = False):
+    """Full-sequence forward. tokens: (B, S) int32.
+
+    prefix_emb: (B, P, d) stub frontend output (VLM patches), prepended.
+    Returns (logits, aux) or (logits, aux, kvs) when collect_kv."""
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens, prefix_emb)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mask_kind = ("prefix" if (cfg.prefix_bidirectional and cfg.prefix_len)
+                 else "causal")
+    prefix_len = cfg.prefix_len if cfg.prefix_bidirectional else 0
+    n_pre, _ = _layer_split(cfg)
+    aux_sum = {"load_balance": 0.0, "router_z": 0.0}
+    kvs = []
+
+    for lp in params.get("head_layers", []):
+        x, kv, aux = _block(lp, x, cfg, opts, kind=jnp.int32(0),
+                            positions=positions, mask_kind=mask_kind,
+                            prefix_len=prefix_len)
+        kvs.append(kv)
+        for k2 in aux:
+            aux_sum[k2] = aux_sum.get(k2, 0.0) + aux[k2]
+
+    kinds = _kind_array(cfg, n_pre, cfg.n_layers - n_pre)
+
+    def scan_body(carry, xs):
+        lp, kind = xs
+        h, kv, aux = _block(lp, carry, cfg, opts, kind=kind,
+                            positions=positions, mask_kind=mask_kind,
+                            prefix_len=prefix_len)
+        outs = (kv, aux) if collect_kv else (None, aux)
+        return h, outs
+
+    body = scan_body
+    if opts.remat == "block":
+        body = jax.checkpoint(scan_body)
+    x, (kv_stack, aux_stack) = jax.lax.scan(body, x, (params["stack"], kinds))
+    for k2 in aux_sum:
+        if aux_stack and k2 in aux_stack:
+            aux_sum[k2] = aux_sum[k2] + jnp.sum(aux_stack[k2])
+    if return_hidden:
+        return cm.rms_norm(x, params["final_norm"]), aux_sum
+    logits = _logits(cfg, params, x)
+    if collect_kv:
+        return logits, aux_sum, (kvs, kv_stack)
+    return logits, aux_sum
+
+
+def train_loss(cfg: ArchConfig, params, batch: Dict, opts=RuntimeOptions()):
+    """batch: {"tokens": (B,S), "labels": (B,S)} (+"prefix_emb" for VLM).
+
+    Uses chunked cross-entropy: (B,S,vocab) logits never materialize."""
+    h, aux = forward(cfg, params, batch["tokens"], opts,
+                     prefix_emb=batch.get("prefix_emb"), return_hidden=True)
+    labels = batch["labels"]
+    Pfx = (batch["prefix_emb"].shape[1]
+           if batch.get("prefix_emb") is not None else 0)
+    S = labels.shape[1]
+    h_pred = h[:, Pfx:Pfx + S - 1]
+    if cfg.tie_embeddings:
+        loss = cm.chunked_xent(h_pred, params["embed"]["emb"],
+                               labels[:, 1:], tied=True)
+    else:
+        loss = cm.chunked_xent(h_pred, params["lm_head"]["w"],
+                               labels[:, 1:], tied=False)
+    total = loss
+    if cfg.moe is not None:
+        total = total + 0.01 * aux["load_balance"] + 1e-4 * aux["router_z"]
+    return total, {"nll": loss, **{k: jnp.asarray(v) for k, v in aux.items()}}
+
+
+# ------------------------------ serving ------------------------------- #
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               opts: RuntimeOptions = RuntimeOptions()):
+    """KV cache pytree. ``opts.cache_dtype='int8'`` enables the tiered-KV
+    policy: int8 cache + per-(layer, kv-head) scales — the paper's
+    "shrink the Q/K/V traffic class" realized as a bandwidth/capacity
+    reduction (DESIGN.md SS3). MLA archs already compress the cache."""
+    quant = opts.cache_dtype == "int8" and cfg.mla is None
+    dtype = (jnp.int8 if quant else
+             (jnp.dtype(opts.cache_dtype) if opts.cache_dtype else opts.jdtype))
+    n_pre, _ = _layer_split(cfg)
+    n_stack = cfg.n_layers - n_pre
+
+    def one(_):
+        if cfg.mla is not None:
+            return mla_mod.init_mla_cache(cfg, batch, max_len, opts.jdtype)
+        c = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                            dtype),
+             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                            dtype)}
+        if quant:
+            c["k_scale"] = jnp.ones((cfg.n_kv_heads,), jnp.float32)
+            c["v_scale"] = jnp.ones((cfg.n_kv_heads,), jnp.float32)
+        return c
+    cache = {"stack": jax.vmap(one)(jnp.arange(n_stack))}
+    if n_pre:
+        cache["head"] = [one(None) for _ in range(n_pre)]
+    return cache
+
+
+def _decode_attn(p, x, cfg, opts, cache_layer, pos, *, kind):
+    """Single-token attention against the cache. x: (B,1,d)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+    q = cm.dense(p["wq"], x).reshape(B, 1, H, hd)
+    k = cm.dense(p["wk"], x).reshape(B, 1, Hkv, hd)
+    v = cm.dense(p["wv"], x).reshape(B, 1, Hkv, hd)
+    q = cm.apply_rope(q, positions)
+    k = cm.apply_rope(k, positions)
+    quant = "k_scale" in cache_layer
+    if opts.seq_shard_attn and not quant:
+        from repro.models.seq_shard_attn import decode_attn_seq_sharded
+
+        def seq_att(window):
+            return decode_attn_seq_sharded(
+                q, k, v, cache_layer["k"], cache_layer["v"], pos,
+                opts.seq_shard_mesh, scale=hd ** -0.5,
+                softcap=cfg.logit_softcap, window=window)
+        if cfg.sliding_window and cfg.local_global_ratio:
+            out, ck, cv = jax.lax.cond(
+                kind == 1, lambda: seq_att(cfg.sliding_window),
+                lambda: seq_att(0))
+        elif cfg.sliding_window:
+            out, ck, cv = seq_att(cfg.sliding_window)
+        else:
+            out, ck, cv = seq_att(0)
+        out = cm.dense(p["wo"], out.reshape(B, 1, H * hd))
+        return out, {"k": ck, "v": cv}
+    if quant:
+        # quantize the new entries with the prefill scales (tiered policy)
+        ksc, vsc = cache_layer["k_scale"], cache_layer["v_scale"]
+        kq = jnp.clip(jnp.round(k.astype(jnp.float32)
+                                / ksc[None, None, :, None]), -127, 127)
+        vq = jnp.clip(jnp.round(v.astype(jnp.float32)
+                                / vsc[None, None, :, None]), -127, 127)
+        ck, cv = cm.update_cache(cache_layer["k"], cache_layer["v"],
+                                 kq, vq, pos)
+        ck_f = ck.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
+        cv_f = cv.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
+    else:
+        ck, cv = cm.update_cache(cache_layer["k"], cache_layer["v"], k, v,
+                                 pos)
+        ck_f, cv_f = ck.astype(q.dtype), cv.astype(q.dtype)
+
+    def att(mk, w):
+        return cm.attention(q, ck_f, cv_f,
+                            mask_kind=mk, window=w, q_offset=pos,
+                            softcap=cfg.logit_softcap, impl=opts.attn_impl,
+                            block_q=opts.block_q, block_kv=opts.block_kv,
+                            acc_dtype=opts.flash_acc)
+    if cfg.sliding_window and cfg.local_global_ratio:
+        out = jax.lax.cond(kind == 1,
+                           lambda: att("sliding", cfg.sliding_window),
+                           lambda: att("causal", 0))
+    elif cfg.sliding_window:
+        out = att("sliding", cfg.sliding_window)
+    else:
+        out = att("causal", 0)
+    out = cm.dense(p["wo"], out.reshape(B, 1, H * hd))
+    new_cache = {"k": ck, "v": cv}
+    if quant:
+        new_cache["k_scale"] = cache_layer["k_scale"]
+        new_cache["v_scale"] = cache_layer["v_scale"]
+    return out, new_cache
+
+
+def _decode_block(lp, x, cfg, opts, cache_layer, pos, *, kind):
+    x = cm.constrain(x, opts.residual_sharding)
+    if cfg.mla is not None:
+        h, new_cache = mla_mod.mla_decode_attn(
+            lp["attn"], cm.rms_norm(x, lp["ln1"]), cfg, cache_layer, pos)
+    else:
+        h, new_cache = _decode_attn(lp["attn"], cm.rms_norm(x, lp["ln1"]),
+                                    cfg, opts, cache_layer, pos, kind=kind)
+    x = x + h
+    h, _ = _ffn_apply(lp, cm.rms_norm(x, lp["ln2"]), cfg, opts)
+    return x + h, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, cache,
+                opts: RuntimeOptions = RuntimeOptions()):
+    """One new token for every sequence. token: (B,) int32; pos: scalar."""
+    B = token.shape[0]
+    x = _embed_tokens(cfg, params, token[:, None], None)
+    n_pre, _ = _layer_split(cfg)
+    new_head = []
+    for lp, cl in zip(params.get("head_layers", []), cache.get("head", [])):
+        x, nc = _decode_block(lp, x, cfg, opts, cl, pos, kind=jnp.int32(0))
+        new_head.append(nc)
+    kinds = _kind_array(cfg, n_pre, cfg.n_layers - n_pre)
+
+    def scan_body(carry, xs):
+        lp, cl, kind = xs
+        h, nc = _decode_block(lp, carry, cfg, opts, cl, pos, kind=kind)
+        return h, nc
+    x, new_stack = jax.lax.scan(scan_body, x,
+                                (params["stack"], cache["stack"], kinds))
+    logits = _logits(cfg, params, x)[:, 0]
+    new_cache = {"stack": new_stack}
+    if new_head:
+        new_cache["head"] = new_head
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache,
+            opts: RuntimeOptions = RuntimeOptions(), prefix_emb=None):
+    """Run the prompt, fill the cache, return last-position logits."""
+    logits, _, (kv_head, kv_stack) = forward(cfg, params, tokens, opts,
+                                             prefix_emb=prefix_emb,
+                                             collect_kv=True)
+    cache_dtype = (jnp.dtype(opts.cache_dtype) if opts.cache_dtype
+                   else opts.jdtype)
+
+    def fill(buf, val):
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0,) * buf.ndim)
+
+    if cfg.mla is not None:
+        new_stack = {"c": jax.vmap(fill)(cache["stack"]["c"], kv_stack[0]),
+                     "k_rope": jax.vmap(fill)(cache["stack"]["k_rope"],
+                                              kv_stack[1])}
+    elif "k_scale" in cache["stack"]:
+        def qfill(buf, val):   # per-layer quantize with fresh scales
+            sc = jnp.maximum(jnp.abs(val.astype(jnp.float32)).max(
+                axis=(0, 1, 3)), 1e-6) / 127.0             # (Hkv,)
+            vq = jnp.clip(jnp.round(val.astype(jnp.float32)
+                                    / sc[None, None, :, None]), -127, 127)
+            return fill(buf, vq), sc
+        ks_new, ksc = jax.vmap(qfill)(cache["stack"]["k"], kv_stack[0])
+        vs_new, vsc = jax.vmap(qfill)(cache["stack"]["v"], kv_stack[1])
+        new_stack = {"k": ks_new, "v": vs_new, "k_scale": ksc,
+                     "v_scale": vsc}
+    else:
+        new_stack = {"k": jax.vmap(fill)(cache["stack"]["k"], kv_stack[0]),
+                     "v": jax.vmap(fill)(cache["stack"]["v"], kv_stack[1])}
+    new_cache = {"stack": new_stack}
+    if cache.get("head"):
+        new_head = []
+        for cl, kv in zip(cache["head"], kv_head):
+            if cfg.mla is not None:
+                new_head.append({"c": fill(cl["c"], kv[0]),
+                                 "k_rope": fill(cl["k_rope"], kv[1])})
+            else:
+                new_head.append({"k": fill(cl["k"], kv[0]),
+                                 "v": fill(cl["v"], kv[1])})
+        new_cache["head"] = new_head
+    return logits[:, -1], new_cache

@@ -1,0 +1,84 @@
+"""Pure Mamba-2 LM (mamba2-130m): attention-free backbone, O(1) decode state.
+
+The paper's Q/K/V-tier placement class has no target tensor here (no KV
+cache) — see DESIGN.md SSArch-applicability; weight-tier placement applies.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import ssd
+
+
+def init_params(cfg: ArchConfig, key, opts):
+    dtype = opts.jdtype
+    k1, k2 = jax.random.split(key)
+    return {"embed": cm.embed_init(k1, cfg.vocab, cfg.d_model, dtype),
+            "stack": jax.vmap(lambda k: ssd.init_mamba(k, cfg, dtype))(
+                jax.random.split(k2, cfg.n_layers)),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _embed(cfg, params, tokens):
+    return params["embed"]["emb"][tokens]
+
+
+def forward(cfg: ArchConfig, params, tokens, opts, prefix_emb=None, *,
+            return_hidden: bool = False, **_):
+    x = _embed(cfg, params, tokens)
+
+    def body(h, lp):
+        h = cm.constrain(h, opts.residual_sharding)
+        return h + ssd.mamba_forward(lp, h, cfg), None
+    body = jax.checkpoint(body) if opts.remat == "block" else body
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    x = cm.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, {}
+    return x @ params["embed"]["emb"].T, {}
+
+
+def train_loss(cfg, params, batch, opts):
+    h, _ = forward(cfg, params, batch["tokens"], opts, return_hidden=True)
+    loss = cm.chunked_xent(h[:, :-1], params["embed"]["emb"],
+                           batch["labels"][:, 1:], tied=True)
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, opts):
+    states = jax.vmap(lambda _: ssd.init_mamba_state(cfg, batch, opts.jdtype))(
+        jnp.arange(cfg.n_layers))
+    return {"ssm_states": states}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, opts, prefix_emb=None):
+    x = _embed(cfg, params, tokens)
+
+    def body(h, lp):
+        h = cm.constrain(h, opts.residual_sharding)
+        y, st = ssd.mamba_forward(lp, h, cfg, return_state=True)
+        return h + y, st
+    x, states = jax.lax.scan(body, x, params["stack"])
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"]["emb"].T)[:, -1]
+    return logits, {"ssm_states": states}
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, cache, opts):
+    x = _embed(cfg, params, token)[:, None, :]
+
+    def body(h, xs):
+        lp, st = xs
+        h = cm.constrain(h, opts.residual_sharding)
+        y, new_st = ssd.mamba_decode(lp, h[:, 0, :], st, cfg)
+        return h + y[:, None, :], new_st
+    x, new_states = jax.lax.scan(body, x, (params["stack"],
+                                           cache["ssm_states"]))
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"]["emb"].T)[:, 0]
+    return logits, {"ssm_states": new_states}

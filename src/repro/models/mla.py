@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2), pure JAX.
+
+Prefill uses the standard (decompressed) path; decode uses the ABSORBED path
+so the per-token cache is only ``kv_lora_rank + rope_head_dim`` wide — the
+architectural realization of the paper's "shrink the Q/K/V traffic class".
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "q_down": cm.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "q_up": cm.dense_init(ks[1], m.q_lora_rank,
+                              H * (m.qk_nope_head_dim + m.rope_head_dim),
+                              dtype),
+        "kv_down": cm.dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim,
+                                 dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "k_up": (jax.random.normal(ks[3], (H, m.kv_lora_rank,
+                                           m.qk_nope_head_dim), jnp.float32)
+                 * (m.kv_lora_rank ** -0.5)).astype(dtype),
+        "v_up": (jax.random.normal(ks[4], (H, m.kv_lora_rank, m.v_head_dim),
+                                   jnp.float32)
+                 * (m.kv_lora_rank ** -0.5)).astype(dtype),
+        "o_proj": cm.dense_init(ks[5], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _q_proj(p, x, cfg: ArchConfig, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = cm.dense(p["q_up"], cm.rms_norm(cm.dense(p["q_down"], x),
+                                        p["q_norm"]))
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = cm.apply_rope(q_rope, positions)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg: ArchConfig, positions):
+    """Compressed latent + shared rope key — this IS the cache entry."""
+    m = cfg.mla
+    ckv = cm.dense(p["kv_down"], x)                       # (B,S,r+dr)
+    c, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c = cm.rms_norm(c, p["kv_norm"])
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_prefill_attn(p, x, cfg: ArchConfig, positions, *, impl="xla"):
+    """Standard (decompressed) MLA attention over the full sequence."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c, k_rope = _kv_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,hrd->bshd", c, p["k_up"].astype(c.dtype))
+    v = jnp.einsum("bsr,hrd->bshd", c, p["v_up"].astype(c.dtype))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.rope_head_dim) ** -0.5
+    out = cm.attention(q_full, k_full, v, mask_kind="causal", scale=scale,
+                       impl=impl)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return cm.dense(p["o_proj"], out), (c, k_rope)
+
+
+def mla_decode_attn(p, x, cfg: ArchConfig, cache: Dict, pos
+                    ) -> Tuple[jax.Array, Dict]:
+    """Absorbed decode: score/combine directly in the latent space.
+
+    cache = {"c": (B, Lmax, r), "k_rope": (B, Lmax, dr)}; pos: scalar int.
+    Per-step KV read = Lmax*(r+dr) bytes — independent of head count."""
+    m = cfg.mla
+    B, S, _ = x.shape                                      # S == 1
+    H = cfg.n_heads
+    positions = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, S))
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    c_new, k_rope_new = _kv_latent(p, x, cfg, positions)
+    cache_c = jax.lax.dynamic_update_slice(
+        cache["c"], c_new.astype(cache["c"].dtype), (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, pos, 0))
+    # absorb q through W_uk: (B,1,H,dn) @ (H,r,dn) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshd,hrd->bshr", q_nope,
+                       p["k_up"].astype(q_nope.dtype))
+    scale = (m.qk_nope_head_dim + m.rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bshr,blr->bhsl", q_lat.astype(jnp.float32),
+                       cache_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,bld->bhsl", q_rope.astype(jnp.float32),
+                        cache_kr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale                      # (B,H,1,L)
+    L = cache_c.shape[1]
+    valid = jnp.arange(L)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, cm.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhsl,blr->bshr", probs,
+                     cache_c.astype(jnp.float32))          # (B,1,H,r)
+    out = jnp.einsum("bshr,hrd->bshd", ctx,
+                     p["v_up"].astype(jnp.float32))        # (B,1,H,dv)
+    out = out.reshape(B, S, H * m.v_head_dim).astype(x.dtype)
+    return cm.dense(p["o_proj"], out), {"c": cache_c, "k_rope": cache_kr}
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype)}

@@ -1,0 +1,88 @@
+"""Sequence-parallel decode attention via shard_map (beyond-paper SSPerf fix).
+
+Problem: a decode step writes one token into a LENGTH-sharded KV cache.
+GSPMD cannot scatter across the sharded dim with a traced index and falls
+back to "involuntary full rematerialization": it all-gathers the whole
+per-layer cache every step (~150 GiB/step on command-r-plus decode_32k).
+
+Fix: do the update + attention manually under shard_map over the "model"
+axis. Each shard owns a contiguous KV range: the new token is written
+locally by exactly one shard; scores are computed against the local range
+only; the softmax is combined with two tiny collectives (pmax of the block
+max, psum of the normalizer and weighted values). Per-step collective
+traffic drops from O(cache bytes) to O(B * H * dh).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _local_attn_update(q, k_new, v_new, ck, cv, pos, *, axis: str,
+                       scale: float, softcap: float, window: int = 0):
+    """Per-shard body. q: (B,1,H,dh) replicated; k/v_new: (B,1,Hkv,dh)
+    replicated; ck/cv: (B, Lloc, Hkv, dh) local shard of the cache."""
+    B, _, H, dh = q.shape
+    Lloc, Hkv = ck.shape[1], ck.shape[2]
+    i = jax.lax.axis_index(axis)
+    base = i * Lloc
+    # ---- local write (exactly one shard is in range) ----
+    idx = pos - base
+    in_range = (idx >= 0) & (idx < Lloc)
+    safe = jnp.clip(idx, 0, Lloc - 1)
+    ck_w = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                        (0, safe, 0, 0))
+    cv_w = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                        (0, safe, 0, 0))
+    ck = jnp.where(in_range, ck_w, ck)
+    cv = jnp.where(in_range, cv_w, cv)
+    # ---- local scores ----
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, dh)
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, ck,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = base + jnp.arange(Lloc)
+    valid = kpos <= pos
+    if window:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    # ---- distributed online softmax ----
+    m_loc = s.max(axis=-1)                               # (B,Hkv,g)
+    m_glob = jax.lax.pmax(m_loc, axis)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_glob[..., None]))
+    l_loc = p.sum(axis=-1)
+    o_loc = jnp.einsum("bhgl,blhd->bhgd", p.astype(cv.dtype), cv,
+                       preferred_element_type=jnp.float32)
+    l_glob = jax.lax.psum(l_loc, axis)
+    o_glob = jax.lax.psum(o_loc, axis)
+    out = (o_glob / jnp.maximum(l_glob, 1e-30)[..., None])
+    return out.reshape(B, 1, H, dh).astype(q.dtype), ck, cv
+
+
+def decode_attn_seq_sharded(q, k_new, v_new, ck, cv, pos, mesh, *,
+                            axis: str = "model", scale: Optional[float] = None,
+                            softcap: float = 0.0, window: int = 0):
+    """shard_map wrapper. Cache sharded P(None, axis, None, None); q and
+    the new KV replicated over ``axis`` (few MB). Returns (out, ck, cv)."""
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    body = partial(_local_attn_update, axis=axis, scale=scale,
+                   softcap=softcap, window=window)
+    ba = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+    rep4 = P(ba, None, None, None)
+    cache_spec = P(ba, axis, None, None)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
+        out_specs=(rep4, cache_spec, cache_spec),
+        check_vma=False)
+    return fn(q, k_new, v_new, ck, cv, pos)

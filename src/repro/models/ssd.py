@@ -1,0 +1,179 @@
+"""Mamba-2 block via the SSD (state-space duality) algorithm, pure JAX.
+
+Training / prefill uses the chunked SSD decomposition (arXiv:2405.21060):
+intra-chunk quadratic term + inter-chunk recurrence over chunk states —
+sub-quadratic in sequence length and scan-friendly for XLA.
+Decode keeps an O(1) recurrent state per layer: (conv tail, SSM state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    return s, d, di, nh, s.n_groups, s.state_dim
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    s, d, di, nh, ng, N = _dims(cfg)
+    conv_dim = di + 2 * ng * N
+    keys = jax.random.split(key, 6)
+    dt_init = jnp.exp(jax.random.uniform(keys[3], (nh,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": cm.dense_init(keys[0], d, 2 * di + 2 * ng * N + nh, dtype),
+        "conv_w": (jax.random.normal(keys[1], (s.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": cm.dense_init(keys[2], di, d, dtype),
+    }
+
+
+def _split_in(cfg, h):
+    s, d, di, nh, ng, N = _dims(cfg)
+    z, xBC, dt = jnp.split(h, [di, 2 * di + 2 * ng * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width K. xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x:(b,S,nh,hd) dt:(b,S,nh) A:(nh,) B,C:(b,S,ng,N).
+
+    Returns y:(b,S,nh,hd) and final state (b,nh,hd,N)."""
+    b, S, nh, hd = x.shape
+    ng, N = B.shape[2], B.shape[3]
+    rep = nh // ng
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+    if Sp != S:
+        padd = ((0, 0), (0, Sp - S))
+        x = jnp.pad(x, padd + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, padd + ((0, 0),))
+        B = jnp.pad(B, padd + ((0, 0), (0, 0)))
+        C = jnp.pad(C, padd + ((0, 0), (0, 0)))
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, ng, N)
+    Cc = C.reshape(b, nc, chunk, ng, N)
+    a = dtc * A                                    # (b,nc,Q,nh) decay logs
+    cum = jnp.cumsum(a, axis=2)
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) dt_j x_j
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b,nc,Q,Q,nh)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(Lmat), 0.0)
+    CB = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)            # (b,nc,Q,Q,ng)
+    CB = jnp.repeat(CB, rep, axis=-1)                        # -> nh
+    M = CB * Lmat * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", M, xc)
+    # chunk states: S_c = sum_j B_j dt_j x_j exp(cum_last - cum_j)
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                   # (b,nc,Q,nh)
+    Bh = jnp.repeat(Bc, rep, axis=3)                         # (b,nc,Q,nh,N)
+    states = jnp.einsum("bcqhn,bcqh,bcqhd->bchdn",
+                        Bh, seg * dtc, xc)                   # (b,nc,nh,hd,N)
+    # inter-chunk recurrence over chunk boundary states
+    lam = jnp.exp(cum[:, :, -1, :])                          # (b,nc,nh)
+
+    def scan_fn(h, xs):
+        st, lm = xs
+        h_new = h * lm[..., None, None] + st
+        return h_new, h
+    h0 = jnp.zeros((b, nh, hd, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         lam.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (b,nc,nh,hd,N)
+    # inter-chunk contribution: C_i . H_{c-1} * exp(cum_i)
+    Ch = jnp.repeat(Cc, rep, axis=3)                         # (b,nc,Q,nh,N)
+    y_inter = jnp.einsum("bcqhn,bchdn->bcqhd", Ch,
+                         h_prev) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, Sp, nh, hd)[:, :S]
+    return y, hT
+
+
+def mamba_forward(p, x, cfg: ArchConfig, *, return_state: bool = False):
+    """Full-sequence SSD block. x: (B,S,d) -> (B,S,d) [+ decode state]."""
+    s, d, di, nh, ng, N = _dims(cfg)
+    h = cm.dense(p["in_proj"], x)
+    z, xBC_raw, dt = _split_in(cfg, h)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xin, B, C = jnp.split(xBC, [di, di + ng * N], axis=-1)
+    Bm = B.reshape(*B.shape[:2], ng, N).astype(jnp.float32)
+    Cm = C.reshape(*C.shape[:2], ng, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(*xin.shape[:2], nh, s.head_dim).astype(jnp.float32)
+    y, hT = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(*y.shape[:2], di).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    p["norm_w"])
+    out = cm.dense(p["out_proj"], y)
+    if not return_state:
+        return out
+    K = s.conv_width - 1
+    tail = xBC_raw[:, -K:, :]
+    pad = jnp.zeros((x.shape[0], max(K - x.shape[1], 0), tail.shape[-1]),
+                    tail.dtype)
+    state = {"conv": jnp.concatenate([pad, tail], axis=1),
+             "ssm": hT}
+    return out, state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    s, d, di, nh, ng, N = _dims(cfg)
+    conv_dim = di + 2 * ng * N
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, nh, s.head_dim, N), jnp.float32)}
+
+
+def mamba_decode(p, x_t, state, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One-token step. x_t: (B,d); O(1) state update."""
+    s, d, di, nh, ng, N = _dims(cfg)
+    h = cm.dense(p["in_proj"], x_t)                        # (B, ...)
+    z, xBC, dt = _split_in(cfg, h)
+    window = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    conv_out = (window * p["conv_w"]).sum(axis=1) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    xin, B, C = jnp.split(xBC, [di, di + ng * N], axis=-1)
+    Bm = B.reshape(-1, ng, N).astype(jnp.float32)
+    Cm = C.reshape(-1, ng, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(-1, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // ng
+    Bh = jnp.repeat(Bm, rep, axis=1)                       # (B,nh,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    decay = jnp.exp(dt * A)                                # (B,nh)
+    h_new = (state["ssm"] * decay[..., None, None]
+             + jnp.einsum("bhn,bh,bhd->bhdn", Bh, dt, xh))
+    y = jnp.einsum("bhn,bhdn->bhd", Ch, h_new) + xh * p["D"][:, None]
+    y = y.reshape(-1, di).astype(x_t.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype),
+                    p["norm_w"])
+    new_state = {"conv": window[:, 1:], "ssm": h_new}
+    return cm.dense(p["out_proj"], y), new_state

@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder transformer (conv frontend is a STUB:
+``input_specs`` feeds 1500 precomputed frame embeddings straight into the
+encoder). Pre-LN LayerNorm + GELU MLP + learned decoder positions, per
+arXiv:2212.04356. Cross-KV is computed once per request at prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+
+
+def _init_attn(key, cfg, d, dtype, bias=True):
+    H, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": cm.dense_init(ks[0], d, H * hd, dtype, bias=bias),
+            "wk": cm.dense_init(ks[1], d, H * hd, dtype),
+            "wv": cm.dense_init(ks[2], d, H * hd, dtype, bias=bias),
+            "wo": cm.dense_init(ks[3], H * hd, d, dtype, bias=bias)}
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"ln1": _ln_init(d, dtype), "attn": _init_attn(k1, cfg, d, dtype),
+            "ln2": _ln_init(d, dtype),
+            "mlp": moe_mod.init_dense_ffn(k2, cfg, cfg.d_ff, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": _ln_init(d, dtype), "self": _init_attn(k1, cfg, d, dtype),
+            "ln_x": _ln_init(d, dtype), "cross": _init_attn(k2, cfg, d, dtype),
+            "ln2": _ln_init(d, dtype),
+            "mlp": moe_mod.init_dense_ffn(k3, cfg, cfg.d_ff, dtype)}
+
+
+def init_params(cfg: ArchConfig, key, opts):
+    dtype = opts.jdtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": cm.embed_init(ks[0], cfg.vocab, d, dtype),
+        "pos_dec": (jax.random.normal(ks[1], (cfg.max_context, d),
+                                      jnp.float32) * 0.01).astype(dtype),
+        "enc_stack": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(ks[2], cfg.enc_layers)),
+        "dec_stack": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(ks[3], cfg.n_layers)),
+        "ln_enc": _ln_init(d, dtype),
+        "ln_dec": _ln_init(d, dtype),
+    }
+
+
+def _sinusoid(n: int, d: int):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(p, xq, xkv, cfg, *, mask_kind, q_offset=0, impl="xla", cache=None,
+         pos=None):
+    B, S, _ = xq.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = cm.dense(p["wq"], xq).reshape(B, S, H, hd)
+    if cache is not None and xkv is None:            # cross-attn from cache
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = cm.dense(p["wk"], xkv).reshape(B, -1, H, hd)
+        v = cm.dense(p["wv"], xkv).reshape(B, -1, H, hd)
+        new_cache = None
+        if cache is not None:                         # self-attn decode
+            ck, cv = cm.update_cache(cache["k"], cache["v"], k, v, pos)
+            k, v = ck, cv
+            new_cache = {"k": ck, "v": cv}
+    out = cm.attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                       mask_kind=mask_kind, q_offset=q_offset, impl=impl)
+    return cm.dense(p["wo"], out.reshape(B, S, H * hd)), new_cache
+
+
+def encode(cfg: ArchConfig, params, frames, opts):
+    """frames: (B, source_len, d) stub embeddings -> encoder output."""
+    x = frames.astype(opts.jdtype) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(opts.jdtype)[None]
+
+    def body(h, lp):
+        h = cm.constrain(h, opts.residual_sharding)
+        a, _ = _mha(lp["attn"], cm.layer_norm(h, **lp["ln1"]),
+                    cm.layer_norm(h, **lp["ln1"]), cfg, mask_kind="full",
+                    impl=opts.attn_impl)
+        h = h + a
+        h = h + moe_mod.dense_ffn(lp["mlp"],
+                                  cm.layer_norm(h, **lp["ln2"]), False)
+        return h, None
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return cm.layer_norm(x, **params["ln_enc"])
+
+
+def _dec_forward(cfg, params, tokens, enc_out, opts, *, collect_kv=False):
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"]["emb"][tokens] + params["pos_dec"][None, :S]
+
+    def body(h, lp):
+        h = cm.constrain(h, opts.residual_sharding)
+        hn = cm.layer_norm(h, **lp["ln1"])
+        a, _ = _mha(lp["self"], hn, hn, cfg, mask_kind="causal",
+                    impl=opts.attn_impl)
+        kv = None
+        if collect_kv:
+            kv = (cm.dense(lp["self"]["wk"], hn).reshape(B, S, H, hd),
+                  cm.dense(lp["self"]["wv"], hn).reshape(B, S, H, hd))
+        h = h + a
+        c, _ = _mha(lp["cross"], cm.layer_norm(h, **lp["ln_x"]), enc_out,
+                    cfg, mask_kind="full", impl=opts.attn_impl)
+        h = h + c
+        h = h + moe_mod.dense_ffn(lp["mlp"],
+                                  cm.layer_norm(h, **lp["ln2"]), False)
+        return h, kv
+    x, kvs = jax.lax.scan(body, x, params["dec_stack"])
+    x = cm.layer_norm(x, **params["ln_dec"])
+    if collect_kv == "hidden":
+        return x
+    logits = x @ params["embed"]["emb"].T
+    return (logits, kvs) if collect_kv else logits
+
+
+def forward(cfg: ArchConfig, params, tokens, opts, prefix_emb=None, **_):
+    """prefix_emb = frame embeddings (B, source_len, d) from the stub."""
+    assert prefix_emb is not None, "whisper needs frame embeddings"
+    enc_out = encode(cfg, params, prefix_emb, opts)
+    return _dec_forward(cfg, params, tokens, enc_out, opts), {}
+
+
+def _fill(buf, val):
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                        (0,) * buf.ndim)
+
+
+def train_loss(cfg, params, batch, opts):
+    enc_out = encode(cfg, params, batch["prefix_emb"], opts)
+    h = _dec_forward(cfg, params, batch["tokens"], enc_out, opts,
+                     collect_kv="hidden")
+    loss = cm.chunked_xent(h[:, :-1], params["embed"]["emb"],
+                           batch["labels"][:, 1:], tied=True)
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, opts):
+    dtype = jnp.dtype(opts.cache_dtype) if opts.cache_dtype else opts.jdtype
+    H, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_len, H, hd), dtype),
+                 "v": jnp.zeros((L, batch, max_len, H, hd), dtype)},
+        "cross": {"k": jnp.zeros((L, batch, cfg.source_len, H, hd), dtype),
+                  "v": jnp.zeros((L, batch, cfg.source_len, H, hd), dtype)},
+    }
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, opts, prefix_emb=None):
+    """Encode audio once; pre-compute cross-KV; run the decoder prompt."""
+    enc_out = encode(cfg, params, prefix_emb, opts)
+    H, hd = cfg.n_heads, cfg.head_dim
+    B = tokens.shape[0]
+
+    def cross_kv(lp):
+        k = cm.dense(lp["cross"]["wk"], enc_out).reshape(B, -1, H, hd)
+        v = cm.dense(lp["cross"]["wv"], enc_out).reshape(B, -1, H, hd)
+        return k, v
+    ck, cv = jax.lax.map(cross_kv, params["dec_stack"])
+    logits, kvs = _dec_forward(cfg, params, tokens, enc_out, opts,
+                               collect_kv=True)
+    cache = {"self": {"k": _fill(cache["self"]["k"], kvs[0]),
+                      "v": _fill(cache["self"]["v"], kvs[1])},
+             "cross": {"k": ck.astype(cache["cross"]["k"].dtype),
+                       "v": cv.astype(cache["cross"]["v"].dtype)}}
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, cache, opts):
+    B = token.shape[0]
+    x = (params["embed"]["emb"][token][:, None, :]
+         + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1)[None])
+
+    def body(h, xs):
+        lp, self_c, cross_c = xs
+        h = cm.constrain(h, opts.residual_sharding)
+        a, new_self = _mha(lp["self"], cm.layer_norm(h, **lp["ln1"]),
+                           cm.layer_norm(h, **lp["ln1"]), cfg,
+                           mask_kind="causal", q_offset=pos,
+                           impl=opts.attn_impl, cache=self_c, pos=pos)
+        h = h + a
+        c, _ = _mha(lp["cross"], cm.layer_norm(h, **lp["ln_x"]), None, cfg,
+                    mask_kind="full", impl=opts.attn_impl, cache=cross_c)
+        h = h + c
+        h = h + moe_mod.dense_ffn(lp["mlp"],
+                                  cm.layer_norm(h, **lp["ln2"]), False)
+        return h, new_self
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["self"], cache["cross"]))
+    x = cm.layer_norm(x, **params["ln_dec"])
+    logits = (x @ params["embed"]["emb"].T)[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,200 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``attn_every`` backbone blocks (arXiv:2411.15242).
+
+The shared block sees concat(hidden, initial_embedding) (width 2d), runs
+attention + MLP with weights shared across sites, and returns to the
+backbone through a per-site linear projection.
+Structure: outer scan over sites x inner scan over the site's mamba layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import ssd
+
+
+def _layout(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.attn_every or cfg.n_layers
+    n_sites = cfg.n_layers // per
+    return n_sites, per
+
+
+def init_params(cfg: ArchConfig, key, opts):
+    dtype = opts.jdtype
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    n_sites, per = _layout(cfg)
+    ks = jax.random.split(key, 8)
+    mamba_stack = jax.vmap(lambda k: ssd.init_mamba(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers))
+    # reshape to (sites, per, ...) for the nested scan
+    mamba_stack = jax.tree.map(
+        lambda a: a.reshape(n_sites, per, *a.shape[1:]), mamba_stack)
+    kq, kk, kv, ko, km = jax.random.split(ks[1], 5)
+    shared = {
+        "ln1": jnp.zeros((2 * d,), dtype),
+        "wq": cm.dense_init(kq, 2 * d, H * hd, dtype),
+        "wk": cm.dense_init(kk, 2 * d, H * hd, dtype),
+        "wv": cm.dense_init(kv, 2 * d, H * hd, dtype),
+        "wo": cm.dense_init(ko, H * hd, H * hd, dtype),
+        "ln2": jnp.zeros((H * hd,), dtype),
+        "mlp": moe_mod.init_dense_ffn(km, cfg.replace(d_model=H * hd),
+                                      cfg.d_ff, dtype),
+    }
+    site_proj = jax.vmap(
+        lambda k: cm.dense_init(k, H * hd, d, dtype))(
+        jax.random.split(ks[2], n_sites))
+    return {"embed": cm.embed_init(ks[3], cfg.vocab, d, dtype),
+            "mamba": mamba_stack, "shared": shared, "site_proj": site_proj,
+            "final_norm": jnp.zeros((d,), dtype)}
+
+
+def _shared_block(sp, x, emb0, cfg, opts, *, positions, cache=None, pos=None):
+    """x, emb0: (B,S,d). Returns (delta (B,S,H*hd), kv or new cache)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    u = cm.rms_norm(jnp.concatenate([x, emb0], axis=-1), sp["ln1"])
+    q = cm.dense(sp["wq"], u).reshape(B, S, H, hd)
+    k = cm.dense(sp["wk"], u).reshape(B, S, H, hd)
+    v = cm.dense(sp["wv"], u).reshape(B, S, H, hd)
+    q = cm.apply_rope(q, positions)
+    k = cm.apply_rope(k, positions)
+    if cache is None:
+        out = cm.attention(q, k, v, mask_kind="causal", impl=opts.attn_impl)
+        kv = (k, v)
+    else:
+        ck, cv = cm.update_cache(cache["k"], cache["v"], k, v, pos)
+        out = cm.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                           mask_kind="causal", q_offset=pos,
+                           impl=opts.attn_impl)
+        kv = {"k": ck, "v": cv}
+    h = cm.dense(sp["wo"], out.reshape(B, S, H * hd))
+    h = h + moe_mod.dense_ffn(sp["mlp"], cm.rms_norm(h, sp["ln2"]),
+                              cfg.gated_mlp)
+    return h, kv
+
+
+def forward(cfg: ArchConfig, params, tokens, opts, prefix_emb=None, *,
+            collect_kv: bool = False, return_hidden: bool = False):
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = params["embed"]["emb"][tokens] * jnp.asarray(math.sqrt(d),
+                                                     params["embed"]["emb"].dtype)
+    emb0 = x
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def site_body(carry, xs):
+        h = cm.constrain(carry, opts.residual_sharding)
+        site_mamba, site_proj = xs
+
+        def mamba_body(hh, lp):
+            return hh + ssd.mamba_forward(lp, hh, cfg), None
+        h, _ = jax.lax.scan(mamba_body, h, site_mamba)
+        delta, kv = _shared_block(params["shared"], h, emb0, cfg, opts,
+                                  positions=positions)
+        h = h + cm.dense(site_proj, delta)
+        return h, (kv if collect_kv else None)
+
+    body = jax.checkpoint(site_body) if opts.remat == "block" else site_body
+    x, kvs = jax.lax.scan(body, x, (params["mamba"], params["site_proj"]))
+    x = cm.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, {}
+    logits = x @ params["embed"]["emb"].T
+    if collect_kv:
+        return logits, {}, kvs
+    return logits, {}
+
+
+def train_loss(cfg, params, batch, opts):
+    h, _ = forward(cfg, params, batch["tokens"], opts, return_hidden=True)
+    loss = cm.chunked_xent(h[:, :-1], params["embed"]["emb"],
+                           batch["labels"][:, 1:], tied=True)
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, opts):
+    dtype = jnp.dtype(opts.cache_dtype) if opts.cache_dtype else opts.jdtype
+    n_sites, per = _layout(cfg)
+    H, hd = cfg.n_heads, cfg.head_dim
+    mamba_states = jax.vmap(lambda _: ssd.init_mamba_state(cfg, batch, opts.jdtype))(
+        jnp.arange(cfg.n_layers))
+    mamba_states = jax.tree.map(
+        lambda a: a.reshape(n_sites, per, *a.shape[1:]), mamba_states)
+    attn = {"k": jnp.zeros((n_sites, batch, max_len, H, hd), dtype),
+            "v": jnp.zeros((n_sites, batch, max_len, H, hd), dtype)}
+    return {"mamba": mamba_states, "attn": attn}
+
+
+def decode_step(cfg: ArchConfig, params, token, pos, cache, opts):
+    B = token.shape[0]
+    d = cfg.d_model
+    x = params["embed"]["emb"][token][:, None, :] * jnp.asarray(
+        math.sqrt(d), params["embed"]["emb"].dtype)
+    emb0 = x
+
+    def site_body(carry, xs):
+        h = cm.constrain(carry, opts.residual_sharding)
+        site_mamba, site_proj, site_attn_cache, site_states = xs
+
+        def mamba_body(hh, xs2):
+            lp, st = xs2
+            y, new_st = ssd.mamba_decode(lp, hh[:, 0, :], st, cfg)
+            return hh + y[:, None, :], new_st
+        h, new_states = jax.lax.scan(mamba_body, h, (site_mamba, site_states))
+        delta, new_kv = _shared_block(
+            params["shared"], h, emb0, cfg, opts,
+            positions=jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1)),
+            cache=site_attn_cache, pos=pos)
+        h = h + cm.dense(site_proj, delta)
+        return h, (new_states, new_kv)
+
+    x, (new_mamba, new_attn) = jax.lax.scan(
+        site_body, x,
+        (params["mamba"], params["site_proj"], cache["attn"], cache["mamba"]))
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"]["emb"].T)[:, 0]
+    return logits, {"mamba": new_mamba, "attn": new_attn}
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache, opts, prefix_emb=None):
+    """Chunked-SSD prefill: full-sequence forward per site, extracting the
+    decode states (SSM + conv tail) and the shared-attention KV."""
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = params["embed"]["emb"][tokens] * jnp.asarray(
+        math.sqrt(d), params["embed"]["emb"].dtype)
+    emb0 = x
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def site_body(carry, xs):
+        h = cm.constrain(carry, opts.residual_sharding)
+        site_mamba, site_proj = xs
+
+        def mamba_body(hh, lp):
+            y, st = ssd.mamba_forward(lp, hh, cfg, return_state=True)
+            return hh + y, st
+        h, states = jax.lax.scan(mamba_body, h, site_mamba)
+        delta, kv = _shared_block(params["shared"], h, emb0, cfg, opts,
+                                  positions=positions)
+        h = h + cm.dense(site_proj, delta)
+        return h, (states, kv)
+
+    x, (mamba_states, kvs) = jax.lax.scan(
+        site_body, x, (params["mamba"], params["site_proj"]))
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = (x @ params["embed"]["emb"].T)[:, -1]
+
+    def fill(buf, val):  # buf: (sites,B,Lmax,H,hd), val: (sites,B,S,H,hd)
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                            (0,) * buf.ndim)
+    new_cache = {"mamba": mamba_states,
+                 "attn": {"k": fill(cache["attn"]["k"], kvs[0]),
+                          "v": fill(cache["attn"]["v"], kvs[1])}}
+    return logits, new_cache

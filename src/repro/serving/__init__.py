@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, ServeStats
+
+__all__ = ["ServeEngine", "ServeStats"]

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (batch_axes, cache_pspecs, data_pspecs,
+                                  opt_state_pspec, param_pspecs)
+
+__all__ = ["batch_axes", "cache_pspecs", "data_pspecs", "opt_state_pspec",
+           "param_pspecs"]

@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, train
+
+__all__ = ["TrainConfig", "train"]

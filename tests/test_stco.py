@@ -1,0 +1,38 @@
+"""STCO driver tests: requirement solvers invert the paper's Fig. 1."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import all_hbs, qkv_in_ddr
+from repro.core.stco import (max_tolerable_latency, required_bandwidth,
+                             sweep)
+from repro.core.memspec import hbs, lpddr6, npu_hierarchy
+
+
+def test_required_bandwidth_monotone_in_target():
+    cfg = get_config("llava15-13b")
+    bw5 = required_bandwidth(cfg, qkv_in_ddr(), target_tps=5.0,
+                             prefill=200, decode=200)
+    bw10 = required_bandwidth(cfg, qkv_in_ddr(), target_tps=10.0,
+                              prefill=200, decode=200)
+    assert bw5 is not None and bw10 is not None
+    assert bw10 > bw5
+    # paper: ~10 TPS needs hundreds of GB/s of HBS with Q/K/V in DDR
+    assert 100 <= bw10 <= 1024
+
+
+def test_latency_requirement_matches_fig1b():
+    """Paper Fig. 1(b): at 512 GB/s all-in-HBS only ~2 us meets 10 TPS."""
+    cfg = get_config("llava15-13b")
+    lat = max_tolerable_latency(cfg, all_hbs(), target_tps=10.0,
+                                bw_gbps=512.0, prefill=200, decode=200)
+    assert lat is not None and 1.0 <= lat <= 8.0
+
+
+def test_sweep_shapes():
+    cfg = get_config("llama3.2-1b")
+    hiers = {"lpddr6": npu_hierarchy(lpddr6(173.0)),
+             "lpddr6+hbs": npu_hierarchy(lpddr6(173.0), hbs(256.0, 10.0))}
+    pts = sweep([cfg], hiers, [all_hbs(), qkv_in_ddr()],
+                [(128, 128), (1024, 512)])
+    assert len(pts) == 2 * 2 * 2
+    assert all(p.tps > 0 for p in pts if p.hierarchy == "lpddr6+hbs")
