@@ -1,0 +1,110 @@
+"""TPS vs concurrency: runtime engine (static vs continuous) x analytical.
+
+The paper's capacity-pressure experiment, answerable for any hierarchy
+preset: every concurrent request adds a full KV cache, so aggregate KV
+grows linearly while the fast tiers don't. Two halves:
+
+1. ANALYTICAL — ``repro.core.concurrency`` sweeps a 1B-class config on the
+   paper's NPU+HBS hierarchy and the bonded-SRAM-chiplet hierarchy,
+   reporting aggregate/per-request TPS and the KV tier split as the
+   ``capacity_aware`` policy starts spilling.
+2. RUNTIME — the reduced same-family config served by the real engine with
+   the static bucketed scheduler vs the continuous paged scheduler over a
+   ragged request stream (the continuous engine keeps slots busy as short
+   requests retire; the static engine waits for each wave).
+
+Run: PYTHONPATH=src python benchmarks/concurrency_sweep.py [--skip-runtime]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.core import (chiplet_qkv, concurrency_sweep, hbs, lpddr6,
+                        max_concurrency_without_spill, npu_hierarchy,
+                        qkv_in_ddr, sram_chiplet)
+from repro.models import RuntimeOptions, init_params
+
+ARCH = "llama3.2-1b"           # the paper's 1B-class subject
+PREFILL, DECODE = 2048, 256
+CONCURRENCY = (1, 2, 4, 8, 16, 32, 64)
+
+
+def hierarchies():
+    return (
+        ("npu+hbs", npu_hierarchy(lpddr6(520.0), hbs(64.0, latency_us=20.0)),
+         qkv_in_ddr()),
+        ("npu+chiplet", npu_hierarchy(lpddr6(173.0),
+                                      chiplet=sram_chiplet(512.0)),
+         chiplet_qkv()),
+    )
+
+
+def analytical() -> None:
+    cfg = get_config(ARCH)
+    print(f"== analytical: {ARCH}  prefill={PREFILL} decode={DECODE} ==")
+    for name, hier, place in hierarchies():
+        limit = max_concurrency_without_spill(cfg, hier, place,
+                                              prefill_len=PREFILL,
+                                              decode_len=DECODE)
+        print(f"\n-- {name} (placement={place.name}; "
+              f"no-spill concurrency limit={limit})")
+        print(f"{'n':>4} {'agg_tps':>10} {'tps/req':>9} {'kv_GB':>7} "
+              f"{'spill':>6} {'bottleneck':>10}  kv tiers")
+        for p in concurrency_sweep(cfg, hier, place,
+                                   concurrency=CONCURRENCY,
+                                   prefill_len=PREFILL, decode_len=DECODE):
+            tiers = " ".join(f"{lv}:{fr:.2f}" for lv, fr in p.kv_locations)
+            print(f"{p.n_concurrent:>4} {p.aggregate_tps:>10.1f} "
+                  f"{p.per_request_tps:>9.2f} {p.kv_bytes/1e9:>7.2f} "
+                  f"{p.kv_spill_frac:>6.2f} {p.bottleneck:>10}  {tiers}")
+
+
+def runtime() -> None:
+    import jax
+    from repro.serving import ServeEngine
+
+    cfg = reduced(get_config(ARCH), d_model=128, n_layers=4, vocab=512)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    rng = np.random.default_rng(0)
+    new_tokens, max_len = 16, 96
+
+    print(f"\n== runtime: reduced {ARCH} ({cfg.d_model}d x {cfg.n_layers}L) "
+          f"ragged prompts, {new_tokens} new tokens ==")
+    print(f"{'n':>4} {'static_tps':>11} {'continuous_tps':>15} "
+          f"{'steps_s/c':>10} {'preempt':>8}")
+    for n in (2, 4, 8):
+        lens = rng.integers(8, 64, size=n)
+        reqs = [rng.integers(1, cfg.vocab, size=int(ln)).tolist()
+                for ln in lens]
+        res = {}
+        for sched in ("static", "continuous"):
+            eng = ServeEngine(cfg, params, opts, max_len=max_len,
+                              scheduler=sched, page_size=16, max_batch=8)
+            # warm the jit caches so TPS compares steady-state decode
+            eng.serve([r[:] for r in reqs], new_tokens)
+            eng.stats.__init__()
+            eng.serve([r[:] for r in reqs], new_tokens)
+            res[sched] = eng.stats
+        s, c = res["static"], res["continuous"]
+        print(f"{n:>4} {s.tps:>11.1f} {c.tps:>15.1f} "
+              f"{s.decode_steps:>4}/{c.decode_steps:<4} "
+              f"{c.preemptions:>8}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-runtime", action="store_true",
+                    help="analytical table only (no jit compiles)")
+    args = ap.parse_args()
+    analytical()
+    if not args.skip_runtime:
+        runtime()
+
+
+if __name__ == "__main__":
+    main()

@@ -30,3 +30,12 @@ reqs = [[1, 2, 3]] * 2 + [[5, 6, 7, 8, 9, 10]] * 3
 outs = eng.serve_bucketed(reqs, 8)
 print(f"{len(outs)} responses, lens={[len(o) for o in outs]}, "
       f"aggregate TPS={eng.stats.tps:.1f}")
+
+print("\nsame ragged requests, continuous batching over the paged KV pool:")
+ceng = ServeEngine(cfg, params, opts, max_len=256, scheduler="continuous",
+                   page_size=16, max_batch=8)
+couts = ceng.serve(reqs, 8)
+assert couts == outs          # token-identical, fewer decode steps
+print(f"{len(couts)} responses, decode steps "
+      f"{ceng.stats.decode_steps} (vs {eng.stats.decode_steps} static), "
+      f"aggregate TPS={ceng.stats.tps:.1f}")

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 test invocation (CPU). Usage: scripts/test.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# CPU XLA setup (see SNIPPETS.md): single host device; JAX stays off any
+# accelerator so Pallas kernels run through interpret mode.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=1 ${XLA_FLAGS:-}"
+
+exec python -m pytest -x -q -m "not slow" "$@"

@@ -2,8 +2,12 @@
 performance model for gen-AI inference over emerging memory technologies
 (HBS, bonded SRAM chiplet), plus its TPU-pod retargeting used by the
 dry-run roofline deliverable."""
-from repro.core import (memspec, placement, roofline, stco, tiling,
-                        tpu_roofline, workload)
+from repro.core import (concurrency, memspec, placement, roofline, stco,
+                        tiling, tpu_roofline, workload)
+from repro.core.concurrency import (ConcurrencyPoint, concurrency_sweep,
+                                    concurrent_inference,
+                                    max_concurrency_without_spill,
+                                    placement_with_kv_split)
 from repro.core.memspec import (ComputeSpec, MemoryHierarchy, MemoryLevel,
                                 hbs, lpddr6, npu_hierarchy, sram_chiplet,
                                 ssd_pcie, tpu_v5e_hierarchy)
@@ -16,8 +20,10 @@ from repro.core.workload import (TC, Kernel, Phase, decode_phase,
                                  prefill_phase, resident_bytes)
 
 __all__ = [
-    "memspec", "placement", "roofline", "stco", "tiling",
+    "concurrency", "memspec", "placement", "roofline", "stco", "tiling",
     "tpu_roofline", "workload",
+    "ConcurrencyPoint", "concurrency_sweep", "concurrent_inference",
+    "max_concurrency_without_spill", "placement_with_kv_split",
     "ComputeSpec", "MemoryHierarchy", "MemoryLevel", "hbs", "lpddr6",
     "npu_hierarchy", "sram_chiplet", "ssd_pcie", "tpu_v5e_hierarchy",
     "Placement", "all_hbs", "capacity_aware", "chiplet_mlp_weights",

@@ -1,0 +1,141 @@
+"""Concurrency-aware analytical serving model (paper capacity pressure).
+
+The paper observes that "even a low degree of concurrent inference serving
+… can further add to memory capacity pressure": every in-flight request
+adds a full KV cache, so the aggregate ``TC.KV`` footprint grows linearly
+with concurrency while the hierarchy's fast tiers do not. This module asks
+the roofline engine the resulting question for ANY hierarchy preset: how
+does TPS scale with the number of concurrent requests once the KV class
+starts spilling to slower tiers?
+
+It is the analytical twin of the runtime's paged KV pool: a
+``PagedKVManager.kv_tier_split()`` can be passed in verbatim (``kv_split``)
+to price attention traffic with the tier occupancy the runtime actually
+produced, instead of the greedy capacity_aware split.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.memspec import MemoryHierarchy
+from repro.core.placement import Placement, capacity_aware
+from repro.core.roofline import InferenceReport, run_inference
+from repro.core.workload import TC, resident_bytes
+
+
+@dataclass(frozen=True)
+class ConcurrencyPoint:
+    """One point of the TPS-vs-concurrency curve."""
+    n_concurrent: int
+    report: InferenceReport
+    kv_bytes: float                              # aggregate KV footprint
+    kv_locations: Tuple[Tuple[str, float], ...]  # where the KV ended up
+    kv_preferred: str                            # the policy's KV tier
+
+    @property
+    def aggregate_tps(self) -> float:
+        return self.report.tps
+
+    @property
+    def per_request_tps(self) -> float:
+        return self.report.tps / self.n_concurrent
+
+    @property
+    def kv_spill_frac(self) -> float:
+        """Fraction of the KV class NOT on its preferred tier."""
+        on_pref = sum(frac for level, frac in self.kv_locations
+                      if level == self.kv_preferred)
+        return 1.0 - on_pref
+
+    @property
+    def bottleneck(self) -> str:
+        return self.report.bottleneck
+
+
+def placement_with_kv_split(place: Placement,
+                            kv_split: Sequence[Tuple[str, float]]
+                            ) -> Placement:
+    """Pin the KV class to an explicit tier split (e.g. the runtime paged
+    pool's ``kv_tier_split()``) instead of the policy's preferred tier."""
+    splits = dict(place.splits)
+    splits[TC.KV] = tuple(kv_split)
+    return Placement(place.name + "+kvrt", dict(place.mapping), splits)
+
+
+def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
+                         place: Placement, *, n_concurrent: int,
+                         prefill_len: int, decode_len: int,
+                         dtype_bytes: int = 2,
+                         kv_split: Optional[Sequence[Tuple[str, float]]] = None
+                         ) -> ConcurrencyPoint:
+    """Serve ``n_concurrent`` simultaneous requests analytically.
+
+    The aggregate KV footprint (``TC.KV`` scaled by batch) runs through
+    ``capacity_aware`` spilling, so past the fast tier's capacity the
+    marginal request pays slow-tier attention traffic — the capacity-
+    pressure curve the runtime engine measures.
+
+    A pinned ``kv_split`` bypasses the greedy KV split entirely: the KV
+    class is removed from the capacity pass (its tier occupancy is instead
+    pre-charged against each tier's capacity) and the runtime-observed
+    split is applied on top."""
+    ctx = prefill_len + decode_len
+    fp = resident_bytes(cfg, ctx, n_concurrent, dtype_bytes)
+    if kv_split is not None:
+        # charge the pinned KV residency against the tiers it occupies so
+        # co-resident classes see the reduced capacity, then keep the KV
+        # class out of capacity_aware (which would re-split and overwrite)
+        kv_bytes = fp[TC.KV]
+        charged = hier
+        for level, frac in kv_split:
+            cap = hier.level(level).capacity
+            if cap is not None:
+                charged = charged.with_level(
+                    level, capacity=max(cap - frac * kv_bytes, 0.0))
+        fp_rest = {c: v for c, v in fp.items() if c != TC.KV}
+        placed = capacity_aware(place, charged, fp_rest)
+        placed = placement_with_kv_split(placed, kv_split)
+    else:
+        placed = capacity_aware(place, hier, fp)
+    rep = run_inference(cfg, hier, placed, prefill_len, decode_len,
+                        batch=n_concurrent, dtype_bytes=dtype_bytes,
+                        capacity_check=False)
+    return ConcurrencyPoint(n_concurrent, rep, fp[TC.KV],
+                            placed.locations(TC.KV), place.mapping[TC.KV])
+
+
+def concurrency_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
+                      place: Placement, *,
+                      concurrency: Iterable[int] = (1, 2, 4, 8, 16),
+                      prefill_len: int = 2048, decode_len: int = 256,
+                      dtype_bytes: int = 2) -> List[ConcurrencyPoint]:
+    """TPS-vs-concurrency curve (the paper's experiment, any hierarchy)."""
+    return [concurrent_inference(cfg, hier, place, n_concurrent=n,
+                                 prefill_len=prefill_len,
+                                 decode_len=decode_len,
+                                 dtype_bytes=dtype_bytes)
+            for n in concurrency]
+
+
+def max_concurrency_without_spill(cfg: ArchConfig, hier: MemoryHierarchy,
+                                  place: Placement, *, prefill_len: int,
+                                  decode_len: int, dtype_bytes: int = 2,
+                                  limit: int = 4096) -> int:
+    """Largest concurrency whose aggregate KV still fits its preferred tier
+    (the runtime admission controller's analytical counterpart)."""
+    kv_level = place.mapping[TC.KV]
+    cap = hier.level(kv_level).capacity
+    if cap is None:
+        return limit
+    ctx = prefill_len + decode_len
+    per_req = float(cfg.kv_bytes_per_token(dtype_bytes)) * ctx
+    if per_req <= 0:
+        return limit
+    # the preferred tier also houses whatever other classes map to it
+    fp1 = resident_bytes(cfg, ctx, 1, dtype_bytes)
+    other = sum(v for c, v in fp1.items()
+                if c != TC.KV and place.mapping.get(c) == kv_level)
+    avail = max(cap - other, 0.0)
+    return max(min(int(avail // per_req), limit), 0)

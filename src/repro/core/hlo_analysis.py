@@ -96,6 +96,26 @@ _INSTR_RE = re.compile(
 _OP_RE = re.compile(r"^((?:\([^=]*?\))|(?:[\w\[\],:{}\s]*?))\s*([\w\-]+)\(")
 
 
+def _split_args(args: str) -> List[str]:
+    """Split an operand list at TOP-LEVEL commas only: operand types carry
+    commas inside brackets/braces (``f32[128,256]{1,0} %x``)."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -154,8 +174,7 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
             i += 1
         args = rest[args_start:i - 1]
         attrs = rest[i:]
-        ins = Instr(name, op, result_type,
-                    [a.strip() for a in args.split(",")], attrs)
+        ins = Instr(name, op, result_type, _split_args(args), attrs)
         cur.instrs.append(ins)
         cur.types[name] = result_type
     return comps, entry

@@ -1,0 +1,26 @@
+"""Pinned names for JAX APIs that moved or renamed across releases.
+
+Every version probe lives here once, instead of per-module copies:
+
+    CompilerParams       pltpu.TPUCompilerParams -> pltpu.CompilerParams
+    shard_map            jax.experimental.shard_map -> jax.shard_map
+    SHARD_MAP_CHECK_KW   its check_rep kwarg -> check_vma
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+    SHARD_MAP_CHECK_KW = "check_vma"
+except AttributeError:                      # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+    SHARD_MAP_CHECK_KW = "check_rep"        # pre-promotion keyword name
+
+
+def __getattr__(name: str):
+    # lazy: keeps the heavyweight pallas import out of non-kernel users
+    if name == "CompilerParams":
+        from jax.experimental.pallas import tpu as pltpu
+        return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    raise AttributeError(name)

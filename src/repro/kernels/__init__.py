@@ -3,12 +3,14 @@
 flash_attention  — blocked causal/GQA prefill attention (VMEM tiling)
 decode_attention — memory-bound KV-cache attention (bf16/int8 KV): the
                    paper's dominant decode kernel, with the int8 variant
-                   realizing its "shrink attention traffic" insight on TPU
+                   realizing its "shrink attention traffic" insight on TPU,
+                   plus a paged variant that gathers physical KV pages via a
+                   scalar-prefetched page table (continuous batching)
 ops              — jit'd wrappers with XLA fallbacks
 ref              — pure-jnp oracles
 """
 from repro.kernels import decode_attention, flash_attention, ops, ref
-from repro.kernels.decode_attention import quantize_kv
+from repro.kernels.decode_attention import paged_decode_attention, quantize_kv
 
 __all__ = ["decode_attention", "flash_attention", "ops", "ref",
-           "quantize_kv"]
+           "paged_decode_attention", "quantize_kv"]

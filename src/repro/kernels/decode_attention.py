@@ -18,7 +18,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jax_compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
+
+
+def _online_softmax_step(q, k, v, valid, base_pos, scale,
+                         m_scr, l_scr, acc_scr):
+    """One flash-attention block update against KV rows [base_pos, +len(k)).
+
+    q: (group, dh) f32; k/v: (bkv, dh) f32 (already dequantized); ``valid``
+    masks rows at absolute position >= valid. Shared by the dense-cache and
+    the paged-cache decode kernels."""
+    bkv = k.shape[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = base_pos + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], bkv), 1)
+    s = jnp.where(kpos < valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * corr + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(jnp.float32), v,
+                                  preferred_element_type=jnp.float32))
+
+
+def _init_scratch(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _finalize(o_ref, l_scr, acc_scr):
+    l = jnp.maximum(l_scr[...], 1e-30)
+    o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
 def _kernel(valid_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref,
@@ -28,9 +66,7 @@ def _kernel(valid_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ki == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _init_scratch(m_scr, l_scr, acc_scr)
 
     valid = valid_ref[0]
     run = ki * block_kv < valid
@@ -43,26 +79,12 @@ def _kernel(valid_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref,
         if quantized:
             k = k * ksc_ref[0]
             v = v * vsc_ref[0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        kpos = ki * block_kv + jax.lax.broadcasted_iota(
-            jnp.int32, (q.shape[0], block_kv), 1)
-        s = jnp.where(kpos < valid, s, NEG_INF)
-        m_prev = m_scr[...]
-        l_prev = l_scr[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
-        corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
-        m_scr[...] = m_new
-        l_scr[...] = l_prev * corr + p.sum(axis=-1)
-        acc_scr[...] = (acc_scr[...] * corr[:, None]
-                        + jax.lax.dot(p.astype(jnp.float32), v,
-                                      preferred_element_type=jnp.float32))
+        _online_softmax_step(q, k, v, valid, ki * block_kv, scale,
+                             m_scr, l_scr, acc_scr)
 
     @pl.when(ki == n_kv - 1)
     def _out():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        _finalize(o_ref, l_scr, acc_scr)
 
 
 def decode_attention(q, k_cache, v_cache, kv_valid, *, scale: float = None,
@@ -110,11 +132,106 @@ def decode_attention(q, k_cache, v_cache, kv_valid, *, scale: float = None,
             pltpu.VMEM((group,), jnp.float32),
             pltpu.VMEM((group, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_valid.astype(jnp.int32), k_scale.astype(jnp.float32),
       v_scale.astype(jnp.float32), qt, kt, vt)
+    return out.reshape(B, H, dh)
+
+
+def _paged_kernel(pt_ref, len_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                  page_size: int, n_pages_per_seq: int, quantized: bool):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        _init_scratch(m_scr, l_scr, acc_scr)
+
+    valid = len_ref[b]
+    run = pi * page_size < valid
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (group, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ksc_ref[0]
+            v = v * vsc_ref[0]
+        _online_softmax_step(q, k, v, valid, pi * page_size, scale,
+                             m_scr, l_scr, acc_scr)
+
+    @pl.when(pi == n_pages_per_seq - 1)
+    def _out():
+        _finalize(o_ref, l_scr, acc_scr)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                           scale: float = None, k_scale=None, v_scale=None,
+                           interpret: bool = False):
+    """Decode attention over a page-table-indirected KV cache.
+
+    q: (B, H, dh); k/v_pages: (n_pages, page_size, Hkv, dh) pooled pages
+    (int8 when scales given); page_table: (B, n_pages_per_seq) int32 physical
+    page ids (entries past a sequence's last used page may point anywhere —
+    typically the reserved null page 0 — and are masked by ``seq_lens``);
+    seq_lens: (B,) int32 valid tokens per sequence -> (B, H, dh).
+
+    The page table is a scalar-prefetch operand: the BlockSpec ``index_map``
+    reads it to gather each sequence's physical KV pages, so the kernel
+    streams exactly the pages the sequence owns (the paper's hierarchical
+    tiling, with one extra level of indirection for continuous batching).
+    """
+    B, H, dh = q.shape
+    n_pages, page_size, Hkv = k_pages.shape[:3]
+    n_pp = page_table.shape[1]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    quantized = k_scale is not None
+
+    qt = q.reshape(B, Hkv, group, dh)                  # (B,Hkv,g,dh)
+    if k_scale is None:
+        k_scale = jnp.ones((Hkv,), jnp.float32)
+        v_scale = jnp.ones((Hkv,), jnp.float32)
+
+    kern = functools.partial(_paged_kernel, scale=scale, page_size=page_size,
+                             n_pages_per_seq=n_pp, quantized=quantized)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # page_table, seq_lens
+        grid=(B, Hkv, n_pp),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, pi, pt, ln: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h, pi, pt, ln: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, pi, pt, ln: (pt[b, pi], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, pi, pt, ln: (pt[b, pi], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      qt, k_pages, v_pages)
     return out.reshape(B, H, dh)
 
 

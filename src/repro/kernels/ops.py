@@ -59,3 +59,25 @@ def try_decode_attention(q, k_cache, v_cache, kv_valid, *, scale: float,
     return decode_attention(q, k_cache, v_cache, kv_valid, scale=scale,
                             k_scale=k_scale, v_scale=v_scale,
                             interpret=_interpret())
+
+
+def try_paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                               scale: float, k_scale=None, v_scale=None
+                               ) -> Optional[jax.Array]:
+    """Route to the paged Pallas decode kernel (page-table KV gather)."""
+    if not _pallas_ok():
+        return None
+    B, H, dh = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    if dh % 128 != 0 and dh not in (64, 128, 256):
+        return None
+    # a (page_size, dh) KV tile must meet the dtype's minimum sublane count
+    min_sublane = {1: 32, 2: 16}.get(jnp.dtype(k_pages.dtype).itemsize, 8)
+    if page_size % min_sublane != 0:
+        return None
+    if H % Hkv != 0:
+        return None
+    from repro.kernels.decode_attention import paged_decode_attention
+    return paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
+                                  scale=scale, k_scale=k_scale,
+                                  v_scale=v_scale, interpret=_interpret())

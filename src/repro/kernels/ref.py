@@ -42,3 +42,19 @@ def decode_attention_ref(q, k_cache, v_cache, kv_valid, *, scale: float,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgl,blhd->bhgd", p, vf)
     return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def gather_pages(pages, page_table):
+    """(n_pages, ps, Hkv, dh) pool + (B, n_pp) table -> dense (B, L, Hkv, dh)."""
+    B, n_pp = page_table.shape
+    ps, Hkv, dh = pages.shape[1:]
+    return pages[page_table].reshape(B, n_pp * ps, Hkv, dh)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *,
+                               scale: float, k_scale=None, v_scale=None):
+    """Oracle for the paged kernel: gather pages densely, then dense ref."""
+    kd = gather_pages(k_pages, page_table)
+    vd = gather_pages(v_pages, page_table)
+    return decode_attention_ref(q, kd, vd, seq_lens, scale=scale,
+                                k_scale=k_scale, v_scale=v_scale)

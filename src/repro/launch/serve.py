@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 32 --kv-policy int8
+
+Continuous batching over the paged KV pool (ragged prompts, per-step
+join/retire, page-pool preemption):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --scheduler continuous --concurrency 8 --page-size 16
 """
 from __future__ import annotations
 
@@ -9,6 +15,7 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.reduce import reduced
@@ -27,21 +34,47 @@ def main() -> None:
     ap.add_argument("--kv-policy", default="native",
                     choices=["native", "int8"])
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--scheduler", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="number of in-flight ragged requests "
+                         "(0: one equal-length wave of --batch prompts)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous scheduler slot count")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, d_model=args.d_model)
+    max_len = args.prompt_len + args.new_tokens
     eng = ServeEngine(cfg, opts=RuntimeOptions(dtype=args.dtype),
-                      kv_policy=args.kv_policy,
-                      max_len=args.prompt_len + args.new_tokens)
-    prompts = jax.random.randint(jax.random.PRNGKey(0),
-                                 (args.batch, args.prompt_len), 1, cfg.vocab)
-    outs = eng.generate(jnp.asarray(prompts), args.new_tokens)
+                      kv_policy=args.kv_policy, max_len=max_len,
+                      scheduler=args.scheduler, page_size=args.page_size,
+                      max_batch=args.max_batch)
+
+    rng = np.random.default_rng(0)
+    if args.concurrency:
+        # ragged request stream: lengths in [prompt_len // 2, prompt_len]
+        lens = rng.integers(max(args.prompt_len // 2, 1),
+                            args.prompt_len + 1, size=args.concurrency)
+        reqs = [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+        outs = eng.serve(reqs, args.new_tokens)
+    else:
+        prompts = jax.random.randint(jax.random.PRNGKey(0),
+                                     (args.batch, args.prompt_len), 1,
+                                     cfg.vocab)
+        if args.scheduler == "continuous":
+            # route through the configured scheduler, not the static wave
+            outs = eng.serve([row.tolist() for row in np.asarray(prompts)],
+                             args.new_tokens)
+        else:
+            outs = eng.generate(jnp.asarray(prompts), args.new_tokens)
     s = eng.stats
-    print(f"[serve] arch={cfg.name} kv={args.kv_policy} batch={args.batch} "
+    print(f"[serve] arch={cfg.name} sched={args.scheduler} "
+          f"kv={args.kv_policy} reqs={s.requests} "
           f"prefill={s.prefill_s*1e3:.0f}ms decode={s.decode_s*1e3:.0f}ms "
-          f"TPS={s.tps:.1f}")
+          f"steps={s.decode_steps} preempt={s.preemptions} TPS={s.tps:.1f}")
     print("[serve] first output:", outs[0][:16])
 
 

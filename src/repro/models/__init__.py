@@ -1,9 +1,12 @@
 """Pure-JAX model zoo: dense/GQA, MLA, MoE, SSM (SSD), hybrid, enc-dec, VLM."""
 from repro.models.api import (RuntimeOptions, SHAPES, ShapeSpec,
-                              cell_runnable, decode_step, forward, init_cache,
-                              init_params, input_specs, module_for, prefill,
+                              cell_runnable, decode_step, decode_step_paged,
+                              forward, init_cache, init_paged_cache,
+                              init_params, input_specs, module_for,
+                              paged_supported, prefill, prefill_paged,
                               train_loss)
 
 __all__ = ["RuntimeOptions", "SHAPES", "ShapeSpec", "cell_runnable",
-           "decode_step", "forward", "init_cache", "init_params",
-           "input_specs", "module_for", "prefill", "train_loss"]
+           "decode_step", "decode_step_paged", "forward", "init_cache",
+           "init_paged_cache", "init_params", "input_specs", "module_for",
+           "paged_supported", "prefill", "prefill_paged", "train_loss"]

@@ -53,6 +53,34 @@ def decode_step(cfg, params, token, pos, cache, opts=RuntimeOptions()):
     return module_for(cfg).decode_step(cfg, params, token, pos, cache, opts)
 
 
+# ------------------------- paged KV (continuous batching) -------------- #
+# Only the decoder-only GQA families page their KV; other families report
+# a reason via paged_supported (DESIGN.md SS10).
+
+def paged_supported(cfg) -> Optional[str]:
+    mod = module_for(cfg)
+    if not hasattr(mod, "paged_supported"):
+        return f"family {cfg.family!r} has no paged serving path"
+    return mod.paged_supported(cfg)
+
+
+def init_paged_cache(cfg, n_pages, page_size, opts=RuntimeOptions()):
+    return module_for(cfg).init_paged_cache(cfg, n_pages, page_size, opts)
+
+
+def prefill_paged(cfg, params, tokens, cache, page_table, true_len,
+                  opts=RuntimeOptions(), *, calibrate: bool = False):
+    return module_for(cfg).prefill_paged(cfg, params, tokens, cache,
+                                         page_table, true_len, opts,
+                                         calibrate=calibrate)
+
+
+def decode_step_paged(cfg, params, token, seq_lens, page_table, cache,
+                      opts=RuntimeOptions()):
+    return module_for(cfg).decode_step_paged(cfg, params, token, seq_lens,
+                                             page_table, cache, opts)
+
+
 # --------------------------- input specs ------------------------------- #
 
 @dataclass(frozen=True)

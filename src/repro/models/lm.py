@@ -339,10 +339,8 @@ def _decode_attn(p, x, cfg, opts, cache_layer, pos, *, kind):
     if quant:
         # quantize the new entries with the prefill scales (tiered policy)
         ksc, vsc = cache_layer["k_scale"], cache_layer["v_scale"]
-        kq = jnp.clip(jnp.round(k.astype(jnp.float32)
-                                / ksc[None, None, :, None]), -127, 127)
-        vq = jnp.clip(jnp.round(v.astype(jnp.float32)
-                                / vsc[None, None, :, None]), -127, 127)
+        kq = _quantize_with(k, ksc)
+        vq = _quantize_with(v, vsc)
         ck, cv = cm.update_cache(cache_layer["k"], cache_layer["v"],
                                  kq, vq, pos)
         ck_f = ck.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
@@ -431,11 +429,8 @@ def prefill(cfg: ArchConfig, params, tokens, cache,
                                               kv_stack[1])}
     elif "k_scale" in cache["stack"]:
         def qfill(buf, val):   # per-layer quantize with fresh scales
-            sc = jnp.maximum(jnp.abs(val.astype(jnp.float32)).max(
-                axis=(0, 1, 3)), 1e-6) / 127.0             # (Hkv,)
-            vq = jnp.clip(jnp.round(val.astype(jnp.float32)
-                                    / sc[None, None, :, None]), -127, 127)
-            return fill(buf, vq), sc
+            sc = _amax_scale(val, (0, 1, 3))               # (Hkv,)
+            return fill(buf, _quantize_with(val, sc)), sc
         ks_new, ksc = jax.vmap(qfill)(cache["stack"]["k"], kv_stack[0])
         vs_new, vsc = jax.vmap(qfill)(cache["stack"]["v"], kv_stack[1])
         new_stack = {"k": ks_new, "v": vs_new, "k_scale": ksc,
@@ -455,3 +450,193 @@ def prefill(cfg: ArchConfig, params, tokens, cache,
                                  "v": fill(cl["v"], kv[1])})
         new_cache["head"] = new_head
     return logits[:, -1], new_cache
+
+
+# --------------------------- paged serving ---------------------------- #
+# Page-pool KV cache for continuous batching (DESIGN.md SS10): fixed-size
+# pages shared by all sequences, indirected through per-sequence page
+# tables. Page 0 is reserved as the null page — padded page-table entries
+# and inactive batch slots write/read it harmlessly (reads are masked by
+# seq_lens, writes land on garbage nobody consumes).
+
+
+def paged_supported(cfg: ArchConfig) -> Optional[str]:
+    """None when the paged-KV path covers this config; else the skip reason."""
+    if cfg.mla is not None:
+        return "MLA latent cache is already compressed; paged path covers GQA"
+    if cfg.family not in ("dense", "moe"):
+        return f"family {cfg.family!r} is not covered by the paged KV path"
+    if _layer_split(cfg)[0]:
+        return "unscanned prefix layers not supported by the paged cache"
+    if cfg.sliding_window:
+        return "sliding-window layers need windowed page masking"
+    if cfg.enc_layers:
+        return "cross-attention caches are not paged"
+    return None
+
+
+def init_paged_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                     opts: RuntimeOptions = RuntimeOptions()):
+    """Pooled KV pages: (n_layers, n_pages, page_size, Hkv, dh) per k/v.
+
+    ``opts.cache_dtype='int8'`` stores int8 pages with per-(layer, kv-head)
+    scales (statically calibrated at the first prefill — the tiered-KV
+    policy of DESIGN.md SS3 applied to the page pool)."""
+    reason = paged_supported(cfg)
+    if reason:
+        raise NotImplementedError(f"paged KV cache: {reason}")
+    quant = opts.cache_dtype == "int8"
+    dtype = (jnp.int8 if quant else
+             (jnp.dtype(opts.cache_dtype) if opts.cache_dtype else opts.jdtype))
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    c = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if quant:
+        c["k_scale"] = jnp.ones((cfg.n_layers, cfg.n_kv_heads), jnp.float32)
+        c["v_scale"] = jnp.ones((cfg.n_layers, cfg.n_kv_heads), jnp.float32)
+    return {"stack": c}
+
+
+def _amax_scale(val, axes):
+    """Per-kv-head symmetric int8 scale: amax/127 reduced over ``axes``."""
+    return jnp.maximum(jnp.abs(val.astype(jnp.float32)).max(axes),
+                       1e-6) / 127.0
+
+
+def _quantize_with(val, scale):
+    """val: (..., Hkv, dh); scale: (..., Hkv) absolute per-head scales."""
+    return jnp.clip(jnp.round(val.astype(jnp.float32)
+                              / scale[..., :, None]), -127, 127)
+
+
+def prefill_paged(cfg: ArchConfig, params, tokens, cache, page_table,
+                  true_len, opts: RuntimeOptions = RuntimeOptions(), *,
+                  calibrate: bool = False):
+    """Prefill that scatters KV into pool pages instead of a dense buffer.
+
+    tokens: (B, S) right-padded prompts with S a multiple of page_size —
+    causal masking keeps pad-token KV from influencing valid positions, and
+    decode later masks reads by seq_lens. page_table: (B, S // page_size)
+    physical pages owned by each prompt; true_len: (B,) actual prompt
+    lengths. ``calibrate=True`` (first prefill only) sets the int8 scales
+    from this batch; afterwards writes clip against the frozen scales.
+
+    Returns (logits at position true_len-1 per sequence, new cache)."""
+    logits, _, (_, kv_stack) = forward(cfg, params, tokens, opts,
+                                       collect_kv=True)
+    st = cache["stack"]
+    ps = st["k"].shape[2]
+    B, S = tokens.shape
+    npp = S // ps
+    flat_ids = page_table.reshape(-1)                   # (B * npp,)
+
+    def chunked(val):                                   # (L,B,S,Hkv,dh)
+        nl = val.shape[0]
+        return val.reshape(nl, B * npp, ps, *val.shape[3:])
+
+    if "k_scale" in st:
+        if calibrate:
+            # pad rows beyond true_len carry garbage KV — keep them out of
+            # the frozen per-(layer, head) scales
+            pos_ok = (jnp.arange(S)[None] < true_len[:, None]
+                      )[None, :, :, None, None]
+            ksc = _amax_scale(jnp.where(pos_ok, kv_stack[0], 0), (1, 2, 4))
+            vsc = _amax_scale(jnp.where(pos_ok, kv_stack[1], 0), (1, 2, 4))
+        else:
+            ksc, vsc = st["k_scale"], st["v_scale"]
+        kq = _quantize_with(kv_stack[0], ksc[:, None, None])
+        vq = _quantize_with(kv_stack[1], vsc[:, None, None])
+        new = {"k": st["k"].at[:, flat_ids].set(chunked(kq).astype(jnp.int8)),
+               "v": st["v"].at[:, flat_ids].set(chunked(vq).astype(jnp.int8)),
+               "k_scale": ksc, "v_scale": vsc}
+    else:
+        new = {"k": st["k"].at[:, flat_ids].set(
+                   chunked(kv_stack[0]).astype(st["k"].dtype)),
+               "v": st["v"].at[:, flat_ids].set(
+                   chunked(kv_stack[1]).astype(st["v"].dtype))}
+    last = jnp.take_along_axis(
+        logits, (true_len - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return last, {"stack": new}
+
+
+def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
+                       cache_layer, seq_lens, page_table):
+    """Single-token attention against pooled KV pages. x: (B, 1, d)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = seq_lens[:, None]                       # ragged positions
+    q = cm.dense(p["wq"], x).reshape(B, 1, H, hd)
+    k = cm.dense(p["wk"], x).reshape(B, 1, Hkv, hd)
+    v = cm.dense(p["wv"], x).reshape(B, 1, Hkv, hd)
+    q = cm.apply_rope(q, positions)
+    k = cm.apply_rope(k, positions)
+    quant = "k_scale" in cache_layer
+    kp, vp = cache_layer["k"], cache_layer["v"]
+    P, ps = kp.shape[0], kp.shape[1]
+    n_pp = page_table.shape[1]
+
+    if quant:
+        ksc, vsc = cache_layer["k_scale"], cache_layer["v_scale"]
+        k_store = _quantize_with(k[:, 0], ksc[None]).astype(jnp.int8)
+        v_store = _quantize_with(v[:, 0], vsc[None]).astype(jnp.int8)
+    else:
+        k_store, v_store = k[:, 0].astype(kp.dtype), v[:, 0].astype(vp.dtype)
+
+    # write the new token's KV at (page_table[b, len//ps], len % ps); the
+    # flat index collapses to the null page for inactive slots (pt == 0)
+    pid = jnp.take_along_axis(page_table, (seq_lens // ps)[:, None],
+                              axis=1)[:, 0]
+    flat = pid * ps + seq_lens % ps                     # (B,)
+    kp = kp.reshape(P * ps, Hkv, hd).at[flat].set(k_store).reshape(kp.shape)
+    vp = vp.reshape(P * ps, Hkv, hd).at[flat].set(v_store).reshape(vp.shape)
+    valid = seq_lens + 1
+
+    out = None
+    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
+        from repro.kernels import ops as kops
+        out = kops.try_paged_decode_attention(
+            q[:, 0], kp, vp, page_table, valid, scale=hd ** -0.5,
+            k_scale=cache_layer.get("k_scale"),
+            v_scale=cache_layer.get("v_scale"))
+        if out is not None:
+            out = out[:, None]                          # (B, 1, H, hd)
+    if out is None:
+        # XLA path: gather the sequence's pages densely, mask by seq_lens
+        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        if quant:
+            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
+            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
+        else:
+            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
+        out = cm.attention(q, kd, vd, mask_kind="full", kv_valid=valid,
+                           softcap=cfg.logit_softcap, impl="xla")
+    out = cm.dense(p["wo"], out.reshape(B, 1, H * hd))
+    new_cache = {"k": kp, "v": vp}
+    if quant:
+        new_cache["k_scale"] = cache_layer["k_scale"]
+        new_cache["v_scale"] = cache_layer["v_scale"]
+    return out, new_cache
+
+
+def decode_step_paged(cfg: ArchConfig, params, token, seq_lens, page_table,
+                      cache, opts: RuntimeOptions = RuntimeOptions()):
+    """One ragged decode step over the paged pool.
+
+    token: (B,) int32 last sampled token per slot; seq_lens: (B,) tokens
+    already cached (the new token lands at this position); page_table:
+    (B, n_pages_per_seq). Inactive slots (page_table rows all zero,
+    seq_len 0) write to the null page and produce ignorable logits.
+    Returns (logits (B, V), new cache)."""
+    x = _embed_tokens(cfg, params, token[:, None], None)
+
+    def scan_body(carry, xs):
+        lp, cl = xs
+        h = cm.constrain(carry, opts.residual_sharding)
+        a, nc = _paged_decode_attn(lp["attn"], cm.rms_norm(h, lp["ln1"]),
+                                   cfg, opts, cl, seq_lens, page_table)
+        h = h + a
+        f, _ = _ffn_apply(lp, cm.rms_norm(h, lp["ln2"]), cfg, opts)
+        return h + f, nc
+    x, new_stack = jax.lax.scan(scan_body, x, (params["stack"], cache["stack"]))
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, {"stack": new_stack}

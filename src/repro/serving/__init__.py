@@ -1,3 +1,8 @@
 from repro.serving.engine import ServeEngine, ServeStats
+from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
+                                      TierBudget, page_bytes)
+from repro.serving.scheduler import ContinuousScheduler, Request
 
-__all__ = ["ServeEngine", "ServeStats"]
+__all__ = ["ServeEngine", "ServeStats", "PageAllocationError",
+           "PagedKVManager", "TierBudget", "page_bytes",
+           "ContinuousScheduler", "Request"]

@@ -8,10 +8,19 @@ traffic to the fast tier, takeaway III), or plain bf16/f32
 interactivity metric — and the analytical model (repro.core) predicts the
 same engine's behaviour on NPU+HBS/chiplet hierarchies.
 
-Batching model: static batch waves over equal-length prompts (bucketed);
-per-wave prefill then lock-step decode with early exit when every sequence
-has emitted EOS. (Continuous batching is an acknowledged future extension —
-DESIGN.md SS9.)
+Two batching models (DESIGN.md SS9/SS10):
+
+* ``scheduler="static"`` — batch waves over equal-length prompts
+  (bucketed); per-wave prefill then lock-step decode with early exit when
+  every sequence has emitted EOS.
+* ``scheduler="continuous"`` — iteration-level batching over a paged,
+  tiered KV cache: requests join/retire per decode step, pages come from a
+  pool capped by a ``TierBudget`` derived from a ``MemoryHierarchy``, and
+  pool exhaustion preempts the youngest request (recompute-style). With
+  the native kv_policy, greedy outputs are token-identical to the static
+  engine; under int8 the schedulers can diverge within quantization error,
+  because the shared page pool calibrates scales once (first prefill)
+  while the static engine recalibrates per wave (DESIGN.md SS3).
 """
 from __future__ import annotations
 
@@ -25,8 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import (RuntimeOptions, decode_step, init_cache,
-                          init_params, prefill)
+from repro.models import (RuntimeOptions, decode_step, decode_step_paged,
+                          init_cache, init_paged_cache, init_params,
+                          paged_supported, prefill, prefill_paged)
+from repro.serving.kv_manager import PagedKVManager, TierBudget
+from repro.serving.scheduler import ContinuousScheduler, Request
 
 
 @dataclass
@@ -35,6 +47,8 @@ class ServeStats:
     decode_s: float = 0.0
     new_tokens: int = 0
     requests: int = 0
+    decode_steps: int = 0
+    preemptions: int = 0
 
     @property
     def tps(self) -> float:
@@ -47,19 +61,48 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params=None,
                  opts: RuntimeOptions = RuntimeOptions(dtype="float32"),
                  *, kv_policy: str = "native", max_len: int = 512,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 scheduler: str = "static", page_size: int = 16,
+                 max_batch: int = 8, n_pages: Optional[int] = None,
+                 hierarchy=None):
         if kv_policy == "int8":
             import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
+        if scheduler not in ("static", "continuous"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if scheduler == "continuous":
+            reason = paged_supported(cfg)
+            if reason:
+                raise NotImplementedError(
+                    f"continuous scheduler needs the paged KV path: {reason}")
         self.cfg = cfg
         self.opts = opts
         self.max_len = max_len
         self.eos_id = eos_id
+        self.scheduler = scheduler
+        self.page_size = page_size
+        self.max_batch = max_batch
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed), opts)
         self._prefill = jax.jit(partial(prefill, cfg, opts=opts))
         self._decode = jax.jit(partial(decode_step, cfg, opts=opts),
                                donate_argnums=(3,))
+        # paged path (continuous scheduler)
+        self.n_pages_per_seq = -(-max_len // page_size)
+        kv_bytes = (jnp.dtype(opts.cache_dtype).itemsize if opts.cache_dtype
+                    else opts.jdtype.itemsize)     # int8 -> 1 via dtype
+        self.tier_budget = (None if hierarchy is None else
+                            TierBudget.from_hierarchy(
+                                hierarchy, cfg, page_size, kv_bytes))
+        # requested pool size; PagedKVManager clamps it to the tier budget
+        self.n_pages = (n_pages if n_pages is not None
+                        else max_batch * self.n_pages_per_seq + 1)
+        self._prefill_paged = jax.jit(
+            partial(prefill_paged, cfg, opts=opts),
+            static_argnames=("calibrate",), donate_argnums=(2,))
+        self._decode_paged = jax.jit(
+            partial(decode_step_paged, cfg, opts=opts), donate_argnums=(4,))
+        self.kv_manager: Optional[PagedKVManager] = None  # set per serve()
         self.stats = ServeStats()
 
     # ------------------------------------------------------------------ #
@@ -70,7 +113,9 @@ class ServeEngine:
         B, S = prompts.shape
         pfx = prefix_emb.shape[1] if prefix_emb is not None else 0
         total = S + pfx + max_new_tokens
-        assert total <= self.max_len + pfx + max_new_tokens
+        assert total <= self.max_len, (
+            f"prompt({S}) + prefix({pfx}) + new({max_new_tokens}) = {total} "
+            f"exceeds max_len={self.max_len}")
         cache = init_cache(self.cfg, B, total, self.opts)
 
         t0 = time.perf_counter()
@@ -102,12 +147,20 @@ class ServeEngine:
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.new_tokens += len(out) * B
         self.stats.requests += B
+        self.stats.decode_steps += max(len(out) - 1, 0)  # prefill made tok 0
         seqs = np.stack(out, axis=1)
         return [row.tolist() for row in seqs]
 
     # ------------------------------------------------------------------ #
+    def serve(self, requests: List[List[int]],
+              max_new_tokens: int) -> List[List[int]]:
+        """Serve ragged requests with the configured scheduler."""
+        if self.scheduler == "continuous":
+            return self.serve_continuous(requests, max_new_tokens)
+        return self.serve_bucketed(requests, max_new_tokens)
+
     def serve_bucketed(self, requests: List[List[int]],
-                       max_new_tokens: int) -> Dict[int, List[List[int]]]:
+                       max_new_tokens: int) -> List[List[int]]:
         """Group ragged requests into equal-length waves and serve each."""
         buckets: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
@@ -119,3 +172,96 @@ class ServeEngine:
             for i, o in zip(idxs, outs):
                 results[i] = o
         return [results[i] for i in range(len(requests))]
+
+    # ------------------------------------------------------------------ #
+    def serve_continuous(self, requests: List[List[int]],
+                         max_new_tokens: int) -> List[List[int]]:
+        """Continuous batching over the paged, tiered KV pool."""
+        ps, n_pp = self.page_size, self.n_pages_per_seq
+        B = self.max_batch
+        kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget)
+        self.kv_manager = kv
+        sched = ContinuousScheduler(kv, B)
+        cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
+        calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
+
+        for i, r in enumerate(requests):
+            total = len(r) + max_new_tokens
+            if total > self.max_len:
+                raise ValueError(f"request {i}: prompt({len(r)}) + "
+                                 f"new({max_new_tokens}) exceeds "
+                                 f"max_len={self.max_len}")
+            sched.submit(Request(rid=i, prompt=list(r),
+                                 max_new_tokens=max_new_tokens))
+
+        def finished(req: Request, tok: int) -> bool:
+            return (req.remaining <= 0
+                    or (self.eos_id is not None and tok == self.eos_id))
+
+        while sched.has_work:
+            # ---- admit + prefill newly joined requests ---- #
+            for slot, req in sched.admit():
+                pf = req.prefill_tokens
+                # the pages admit() reserved are the single source of truth
+                # for the page-aligned prefill length
+                padded = len(kv.seq_pages(req.rid)) * ps
+                toks = np.zeros((1, padded), np.int32)
+                toks[0, :len(pf)] = pf
+                pt = kv.table_row(req.rid, padded // ps)[None]
+                t0 = time.perf_counter()
+                logits, cache = self._prefill_paged(
+                    self.params, jnp.asarray(toks), cache, jnp.asarray(pt),
+                    jnp.asarray([len(pf)], jnp.int32),
+                    calibrate=not calibrated)
+                logits.block_until_ready()
+                calibrated = True
+                self.stats.prefill_s += time.perf_counter() - t0
+                tok = int(np.argmax(np.asarray(logits[0])))
+                req.out.append(tok)
+                self.stats.new_tokens += 1
+                if finished(req, tok):
+                    sched.retire(slot)
+
+            if not sched.slots:
+                if sched.waiting:      # nothing running yet pool blocked:
+                    continue           # admit() will retry (pages now free)
+                break
+
+            # ---- account the pending token's KV write (may preempt) ---- #
+            before = dict(sched.slots)
+            for slot in list(sched.slots):
+                if slot in sched.slots:     # may have been preempted
+                    sched.grow_seq(slot)
+            self.stats.preemptions += sum(
+                1 for s in before if s not in sched.slots)
+
+            # ---- one ragged decode step over all active slots ---- #
+            tokens = np.zeros((B,), np.int32)
+            seq_lens = np.zeros((B,), np.int32)
+            tables = np.zeros((B, n_pp), np.int32)
+            for slot, req in sched.slots.items():
+                tokens[slot] = req.out[-1]
+                seq_lens[slot] = kv.seq_len(req.rid) - 1  # write position
+                row = kv.table_row(req.rid, n_pp)
+                tables[slot] = row
+            t0 = time.perf_counter()
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(tokens), jnp.asarray(seq_lens),
+                jnp.asarray(tables), cache)
+            logits_np = np.asarray(logits)
+            self.stats.decode_s += time.perf_counter() - t0
+            self.stats.decode_steps += 1
+
+            for slot in list(sched.slots):
+                req = sched.slots[slot]
+                tok = int(np.argmax(logits_np[slot]))
+                req.out.append(tok)
+                self.stats.new_tokens += 1
+                if finished(req, tok):
+                    sched.retire(slot)
+
+        self.stats.requests += len(requests)
+        assert not sched.waiting and not sched.slots, "unserved requests"
+        assert kv.n_used == 0, "page leak: retired sequences kept pages"
+        by_rid = {req.rid: req.out for req in sched.done}
+        return [by_rid[i] for i in range(len(requests))]

@@ -1,0 +1,207 @@
+"""Paged, tiered KV-cache manager (DESIGN.md SS10).
+
+The runtime half of the paper's capacity-pressure story: the KV cache is a
+pool of fixed-size pages shared by all in-flight sequences, indirected
+through per-sequence page tables. A ``TierBudget`` derived from a
+``repro.core.MemoryHierarchy`` caps the pool at what the hierarchy's KV
+tiers can physically hold, and reports the pool's occupancy *as a tier
+split* — the same ``((level, fraction), ...)`` shape the analytical
+placement model consumes — so runtime admission pressure and analytical
+spill predictions are computed from one source of truth.
+
+Host-side bookkeeping is plain Python (free list + dicts); the page pool
+arrays themselves live in the model cache (``models.init_paged_cache``).
+Page 0 is reserved as the null page: padded page-table entries point at it,
+inactive slots write into it, and nothing ever reads it unmasked.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+# tiers a KV page may occupy, preferred (fastest) first; mirrors the
+# placement policies in repro.core.placement
+DEFAULT_KV_TIERS = ("chiplet", "ddr", "hbs")
+
+
+def page_bytes(cfg: ArchConfig, page_size: int, dtype_bytes: int = 2) -> int:
+    """Bytes one KV page holds across all layers (k + v)."""
+    per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers * dtype_bytes
+    return per_tok * page_size
+
+
+@dataclass(frozen=True)
+class TierBudget:
+    """Per-tier page counts, preferred (fastest) tier first."""
+    tiers: Tuple[Tuple[str, int], ...]     # ((level_name, n_pages), ...)
+
+    @property
+    def total_pages(self) -> int:
+        return sum(n for _, n in self.tiers)
+
+    @classmethod
+    def from_hierarchy(cls, hier, cfg: ArchConfig, page_size: int,
+                       dtype_bytes: int = 2,
+                       kv_tiers: Sequence[str] = DEFAULT_KV_TIERS,
+                       reserve_bytes: Dict[str, float] = None) -> "TierBudget":
+        """Pages per tier from the hierarchy's KV-eligible capacities.
+
+        ``reserve_bytes`` subtracts non-KV residency (weights, activations)
+        per level before converting the remainder to pages — e.g. the output
+        of ``workload.resident_bytes`` routed through a placement."""
+        pb = page_bytes(cfg, page_size, dtype_bytes)
+        reserve = reserve_bytes or {}
+        tiers: List[Tuple[str, int]] = []
+        for name in kv_tiers:
+            try:
+                lv = hier.level(name)
+            except KeyError:
+                continue
+            cap = lv.capacity
+            if cap is None:
+                tiers.append((name, 1 << 30))
+                continue
+            avail = max(cap - reserve.get(name, 0.0), 0.0)
+            n = int(avail // pb)
+            if n > 0:
+                tiers.append((name, n))
+        if not tiers:
+            raise ValueError(
+                f"no KV-eligible tier in {kv_tiers} can hold even one "
+                f"{pb}-byte page")
+        return cls(tuple(tiers))
+
+
+class PageAllocationError(RuntimeError):
+    """Raised when the pool cannot satisfy an allocation (caller preempts)."""
+
+
+@dataclass
+class _SeqAlloc:
+    pages: List[int] = field(default_factory=list)
+    n_tokens: int = 0
+
+
+class PagedKVManager:
+    """Free-list page allocator with per-sequence page tables.
+
+    Invariants (tested): every page is either free or owned by exactly one
+    sequence; ``n_free + n_used == n_pages - 1`` (page 0 reserved);
+    ``free_seq`` returns every page a sequence owned.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, *,
+                 tier_budget: Optional[TierBudget] = None):
+        if tier_budget is not None:
+            n_pages = min(n_pages, tier_budget.total_pages + 1)
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.tier_budget = tier_budget
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> 1
+        self._seqs: Dict[int, _SeqAlloc] = {}
+
+    # ------------------------------ queries ---------------------------- #
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return sum(len(s.pages) for s in self._seqs.values())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int, headroom_pages: int = 0) -> bool:
+        return self.pages_needed(n_tokens) + headroom_pages <= self.n_free
+
+    def fits_at_all(self, n_tokens: int) -> bool:
+        """Could the request EVER run, with the whole pool to itself?"""
+        return self.pages_needed(n_tokens) <= self.n_pages - 1
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._seqs[seq_id].n_tokens
+
+    def seq_pages(self, seq_id: int) -> List[int]:
+        return list(self._seqs[seq_id].pages)
+
+    # ---------------------------- allocation --------------------------- #
+    def allocate(self, seq_id: int, n_tokens: int, *,
+                 reserve_tokens: Optional[int] = None) -> List[int]:
+        """Claim pages for a prefill. Pages are sized for ``reserve_tokens``
+        (e.g. the page-aligned padded prompt) while ``n_tokens`` records the
+        real sequence length. Raises on exhaustion."""
+        if seq_id in self._seqs:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        need = self.pages_needed(max(reserve_tokens or 0, n_tokens))
+        if need > self.n_free:
+            raise PageAllocationError(
+                f"need {need} pages for seq {seq_id}, only {self.n_free} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens)
+        return list(pages)
+
+    def append_token(self, seq_id: int) -> Optional[int]:
+        """Extend a sequence by one token; returns the newly claimed page id
+        when a page boundary is crossed, else None. Raises on exhaustion
+        (the scheduler preempts and retries)."""
+        s = self._seqs[seq_id]
+        new_page = None
+        if self.pages_needed(s.n_tokens + 1) > len(s.pages):
+            if not self._free:
+                raise PageAllocationError(
+                    f"page pool exhausted extending seq {seq_id}")
+            new_page = self._free.pop()
+            s.pages.append(new_page)
+        s.n_tokens += 1
+        return new_page
+
+    def free_seq(self, seq_id: int) -> int:
+        """Release all pages of a retired/preempted sequence."""
+        s = self._seqs.pop(seq_id)
+        self._free.extend(s.pages)
+        return len(s.pages)
+
+    # --------------------------- table export -------------------------- #
+    def table_row(self, seq_id: int, n_pages_per_seq: int) -> np.ndarray:
+        """Padded int32 page-table row (null page 0 past the last page)."""
+        pages = self._seqs[seq_id].pages
+        row = np.zeros((n_pages_per_seq,), np.int32)
+        row[:len(pages)] = pages
+        return row
+
+    # --------------------------- tier feedback ------------------------- #
+    def kv_tier_split(self) -> Tuple[Tuple[str, float], ...]:
+        """Occupied pages as a tier split, fast tier filled first.
+
+        Matches the ``Placement.splits`` shape so the analytical model can
+        price attention traffic with the runtime pool's actual placement."""
+        used = self.n_used
+        if not used:
+            return ()
+        if self.tier_budget is None:
+            raise ValueError(
+                "kv_tier_split() needs tier information: construct the "
+                "manager with tier_budget=TierBudget.from_hierarchy(...)")
+        out: List[Tuple[str, float]] = []
+        rem = used
+        for name, cap in self.tier_budget.tiers:
+            take = min(rem, cap)
+            if take > 0:
+                out.append((name, take / used))
+                rem -= take
+            if rem == 0:
+                break
+        return tuple(out)
+
+    def tier_occupancy_bytes(self, cfg: ArchConfig, dtype_bytes: int = 2
+                             ) -> Dict[str, float]:
+        pb = page_bytes(cfg, self.page_size, dtype_bytes)
+        return {name: frac * self.n_used * pb
+                for name, frac in self.kv_tier_split()}

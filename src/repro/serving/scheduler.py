@@ -1,0 +1,142 @@
+"""Continuous-batching request scheduler (DESIGN.md SS10).
+
+Iteration-level scheduling over a fixed set of batch *slots*: requests join
+the running batch the moment a slot and enough KV pages are free, and
+retire individually (EOS / token budget), so short requests never wait for
+the longest member of a wave — the failure mode of the static bucketed
+engine under the paper's concurrent-inference pressure.
+
+When the page pool is exhausted mid-decode the scheduler preempts the
+most-recently admitted running request (LIFO, vLLM-style recompute
+preemption): its pages are freed and its prompt *plus the tokens it already
+emitted* are requeued as a new prefill, which makes preemption invisible in
+the final output (greedy decode is deterministic).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serving.kv_manager import PageAllocationError, PagedKVManager
+
+WAITING, RUNNING, DONE = "waiting", "running", "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    out: List[int] = field(default_factory=list)
+    state: str = WAITING
+    n_preemptions: int = 0
+    admit_order: int = -1      # monotone stamp of the LAST admission
+
+    @property
+    def prefill_tokens(self) -> List[int]:
+        """What a (re)prefill must feed: prompt + already-emitted tokens."""
+        return self.prompt + self.out
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.out)
+
+
+class ContinuousScheduler:
+    """Owns the waiting queue, the slot table, and preemption policy."""
+
+    def __init__(self, kv: PagedKVManager, max_batch: int):
+        self.kv = kv
+        self.max_batch = max_batch
+        self.waiting: Deque[Request] = deque()
+        self.slots: Dict[int, Request] = {}      # slot index -> request
+        self.done: List[Request] = []
+        self._admit_stamp = 0
+
+    # ------------------------------ queries ---------------------------- #
+    @property
+    def n_running(self) -> int:
+        return len(self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.slots)
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.max_batch) if i not in self.slots]
+
+    # ------------------------------ submit ----------------------------- #
+    def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if not self.kv.fits_at_all(total):
+            raise ValueError(
+                f"request {req.rid} needs {self.kv.pages_needed(total)} pages"
+                f" but the pool only has {self.kv.n_pages - 1}")
+        self.waiting.append(req)
+
+    # ------------------------------ admit ------------------------------ #
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Admit waiting requests while a slot + pages are available.
+
+        Reserves pages for the padded prefill plus one headroom page so an
+        admission cannot immediately deadlock the next decode step."""
+        admitted: List[Tuple[int, Request]] = []
+        free = self.free_slots()
+        while free and self.waiting:
+            req = self.waiting[0]
+            pf_len = len(req.prefill_tokens)
+            padded = -(-pf_len // self.kv.page_size) * self.kv.page_size
+            # a solo admission may take the whole pool (``submit`` proved the
+            # request fits it end-to-end); otherwise keep one headroom page
+            # so the next decode write cannot instantly deadlock
+            solo = not self.slots and not admitted
+            if not self.kv.can_admit(padded, headroom_pages=0 if solo else 1):
+                break                      # FCFS: don't starve the head
+            self.waiting.popleft()
+            slot = free.pop(0)
+            self.kv.allocate(req.rid, pf_len, reserve_tokens=padded)
+            req.state = RUNNING
+            req.admit_order = self._admit_stamp
+            self._admit_stamp += 1
+            self.slots[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    # ----------------------------- retire ------------------------------ #
+    def retire(self, slot: int) -> Request:
+        req = self.slots.pop(slot)
+        req.state = DONE
+        self.kv.free_seq(req.rid)
+        self.done.append(req)
+        return req
+
+    # ---------------------------- preemption --------------------------- #
+    def preempt_one(self, protect: Optional[int] = None) -> Optional[int]:
+        """Evict the most recently admitted running request (except the
+        ``protect`` slot); its pages return to the pool and it rejoins the
+        FRONT of the waiting queue for recompute. Returns the slot freed."""
+        candidates = [(req.admit_order, slot) for slot, req in
+                      self.slots.items() if slot != protect]
+        if not candidates:
+            return None
+        _, slot = max(candidates)
+        req = self.slots.pop(slot)
+        self.kv.free_seq(req.rid)
+        req.state = WAITING
+        req.n_preemptions += 1
+        req.admit_order = -1
+        self.waiting.appendleft(req)
+        return slot
+
+    def grow_seq(self, slot: int) -> None:
+        """Account one appended token for the request in ``slot``, preempting
+        others (LIFO) until the page pool can take the write."""
+        req = self.slots[slot]
+        while True:
+            try:
+                self.kv.append_token(req.rid)
+                return
+            except PageAllocationError:
+                if self.preempt_one(protect=slot) is None:
+                    raise

@@ -1,0 +1,124 @@
+"""Analytical concurrency model: capacity_aware spill ordering under
+multi-request KV footprints and the TPS-vs-concurrency curve."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (TC, capacity_aware, chiplet_qkv, concurrency_sweep,
+                        concurrent_inference, hbs, lpddr6,
+                        max_concurrency_without_spill, npu_hierarchy,
+                        placement_with_kv_split, qkv_in_ddr, resident_bytes,
+                        sram_chiplet)
+
+CFG = get_config("llama3.2-1b")
+PF, DC = 2048, 256
+
+
+def _hbs_hier():
+    return npu_hierarchy(lpddr6(520.0), hbs(64.0, latency_us=20.0))
+
+
+def _chiplet_hier():
+    return npu_hierarchy(lpddr6(173.0), chiplet=sram_chiplet(512.0))
+
+
+# ---------------------- capacity-aware multi-request ------------------- #
+
+def test_capacity_aware_spills_multi_request_kv_to_next_tier():
+    hier = _hbs_hier()
+    place = qkv_in_ddr()                  # KV prefers the 16 GB DDR
+    ctx = PF + DC
+    per_req = CFG.kv_bytes_per_token(2) * ctx
+    ddr_cap = hier.level("ddr").capacity
+    n = int(ddr_cap // per_req) + 8       # guaranteed past DDR capacity
+    fp = resident_bytes(CFG, ctx, n, 2)
+    placed = capacity_aware(place, hier, fp)
+    locs = dict(placed.locations(TC.KV))
+    assert "ddr" in locs and "hbs" in locs      # spill goes outward to HBS
+    assert locs["ddr"] + locs["hbs"] == pytest.approx(1.0)
+    # the resident fraction is what physically fits after heavier classes
+    assert 0.0 < locs["ddr"] < 1.0
+
+
+def test_capacity_aware_spill_ordering_biggest_class_first():
+    """Classes are placed in descending footprint: with enough requests the
+    KV class dwarfs the weights and claims its tier's capacity first."""
+    hier = _hbs_hier()
+    place = qkv_in_ddr()
+    ctx = PF + DC
+    n_small, n_big = 1, 256
+    fp_small = resident_bytes(CFG, ctx, n_small, 2)
+    fp_big = resident_bytes(CFG, ctx, n_big, 2)
+    assert fp_big[TC.KV] == pytest.approx(n_big * fp_small[TC.KV])
+    placed_small = capacity_aware(place, hier, fp_small)
+    placed_big = capacity_aware(place, hier, fp_big)
+    assert placed_small.locations(TC.KV) == (("ddr", 1.0),)  # no pressure
+    big_ddr = dict(placed_big.locations(TC.KV))["ddr"]
+    assert big_ddr < 1.0                                     # spilled
+
+
+# ------------------------- concurrency sweep --------------------------- #
+
+@pytest.mark.parametrize("hier_fn,place_fn", [(_hbs_hier, qkv_in_ddr),
+                                              (_chiplet_hier, chiplet_qkv)])
+def test_sweep_per_request_tps_decreases(hier_fn, place_fn):
+    pts = concurrency_sweep(CFG, hier_fn(), place_fn(),
+                            concurrency=(1, 4, 16, 64),
+                            prefill_len=PF, decode_len=DC)
+    per_req = [p.per_request_tps for p in pts]
+    assert all(t > 0 for t in per_req)
+    assert all(a >= b * 0.999 for a, b in zip(per_req, per_req[1:]))
+    # aggregate KV grows linearly with concurrency
+    assert pts[-1].kv_bytes == pytest.approx(64 * pts[0].kv_bytes)
+    # spill fraction is monotone non-decreasing
+    spills = [p.kv_spill_frac for p in pts]
+    assert all(a <= b + 1e-9 for a, b in zip(spills, spills[1:]))
+
+
+def test_max_concurrency_without_spill_is_tight():
+    hier, place = _hbs_hier(), qkv_in_ddr()
+    n = max_concurrency_without_spill(CFG, hier, place,
+                                      prefill_len=PF, decode_len=DC)
+    assert n >= 1
+    at = concurrent_inference(CFG, hier, place, n_concurrent=n,
+                              prefill_len=PF, decode_len=DC)
+    over = concurrent_inference(CFG, hier, place, n_concurrent=n + 1,
+                                prefill_len=PF, decode_len=DC)
+    assert at.kv_spill_frac == 0.0
+    assert over.kv_spill_frac > 0.0
+
+
+def test_spill_degrades_aggregate_tps_on_hbs():
+    """Past the DDR capacity knee, marginal requests pay HBS-latency
+    attention reads — the paper's capacity-pressure cliff."""
+    hier, place = _hbs_hier(), qkv_in_ddr()
+    n0 = max_concurrency_without_spill(CFG, hier, place,
+                                       prefill_len=PF, decode_len=DC)
+    at = concurrent_inference(CFG, hier, place, n_concurrent=n0,
+                              prefill_len=PF, decode_len=DC)
+    over = concurrent_inference(CFG, hier, place, n_concurrent=2 * n0,
+                                prefill_len=PF, decode_len=DC)
+    assert over.per_request_tps < at.per_request_tps * 0.5
+
+
+# --------------------- runtime -> analytical bridge -------------------- #
+
+def test_runtime_kv_split_feeds_placement():
+    from repro.configs.reduce import reduced
+    from repro.serving import PagedKVManager, TierBudget
+
+    cfg = reduced(CFG, d_model=64, n_layers=2)
+    hier = npu_hierarchy(lpddr6(capacity_gb=1e-3),
+                         hbs(64.0, latency_us=20.0, capacity_gb=1e-2),
+                         chiplet=sram_chiplet(512.0, capacity_mb=0.1))
+    tb = TierBudget.from_hierarchy(hier, cfg, 16, 4)
+    kv = PagedKVManager(10_000, 16, tier_budget=tb)
+    n_chip = dict(tb.tiers)["chiplet"]
+    kv.allocate(0, (n_chip + 5) * 16)
+    split = kv.kv_tier_split()
+    place = placement_with_kv_split(chiplet_qkv(), split)
+    assert place.locations(TC.KV) == split
+    # and it prices: a report computes with the runtime-observed split
+    rep = concurrent_inference(cfg, hier, chiplet_qkv(), n_concurrent=2,
+                               prefill_len=64, decode_len=16,
+                               kv_split=split)
+    assert rep.aggregate_tps > 0

@@ -2,6 +2,9 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
