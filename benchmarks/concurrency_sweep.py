@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.reduce import reduced
-from repro.core import (chiplet_qkv, concurrency_sweep, hbs, lpddr6,
-                        max_concurrency_without_spill, npu_hierarchy,
+from repro.core import (chiplet_qkv, concurrency_sweep, hbs, kv_dedup_factor,
+                        lpddr6, max_concurrency_without_spill, npu_hierarchy,
                         qkv_in_ddr, sram_chiplet)
 from repro.models import RuntimeOptions, init_params
 
@@ -76,7 +76,8 @@ def runtime() -> None:
     print(f"\n== runtime: reduced {ARCH} ({cfg.d_model}d x {cfg.n_layers}L) "
           f"ragged prompts, {new_tokens} new tokens ==")
     print(f"{'n':>4} {'static_tps':>11} {'continuous_tps':>15} "
-          f"{'steps_s/c':>10} {'preempt':>8}")
+          f"{'steps_s/c':>10} {'preempt':>8} {'ttft_p50/p95_ms':>16} "
+          f"{'itl_p50/p95_ms':>15}")
     for n in (2, 4, 8):
         lens = rng.integers(8, 64, size=n)
         reqs = [rng.integers(1, cfg.vocab, size=int(ln)).tolist()
@@ -93,7 +94,64 @@ def runtime() -> None:
         s, c = res["static"], res["continuous"]
         print(f"{n:>4} {s.tps:>11.1f} {c.tps:>15.1f} "
               f"{s.decode_steps:>4}/{c.decode_steps:<4} "
-              f"{c.preemptions:>8}")
+              f"{c.preemptions:>8} "
+              f"{c.ttft_p50*1e3:>7.1f}/{c.ttft_p95*1e3:<8.1f} "
+              f"{c.itl_p50*1e3:>6.1f}/{c.itl_p95*1e3:<8.1f}")
+
+
+def shared_prefix_analytical() -> None:
+    """Sharing-aware no-spill concurrency per hierarchy preset."""
+    cfg = get_config(ARCH)
+    print(f"\n== shared-prefix dedup: {ARCH} prefill={PREFILL} "
+          f"decode={DECODE} (prefix = 75% of prompt) ==")
+    pfx = int(PREFILL * 0.75)
+    print(f"{'hier':>12} {'share_group':>12} {'dedup@8':>8} "
+          f"{'no-spill limit':>15}")
+    for name, hier, place in hierarchies():
+        for g in (1, 4, 8):
+            lim = max_concurrency_without_spill(
+                cfg, hier, place, prefill_len=PREFILL, decode_len=DECODE,
+                shared_prefix_len=pfx, share_group=g)
+            f = kv_dedup_factor(8, PREFILL, DECODE,
+                                shared_prefix_len=pfx, share_group=g)
+            print(f"{name:>12} {g:>12} {f:>8.2f} {lim:>15}")
+
+
+def shared_prefix_runtime() -> None:
+    """Measured dedup on a shared-document QA workload vs predicted."""
+    import jax
+    from repro.serving import ServeEngine
+
+    rcfg = reduced(get_config(ARCH), d_model=128, n_layers=4, vocab=512)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(rcfg, jax.random.PRNGKey(0), opts)
+    rng = np.random.default_rng(1)
+    doc = rng.integers(1, rcfg.vocab, size=48).tolist()
+    reqs = [doc + rng.integers(1, rcfg.vocab, size=8).tolist()
+            for _ in range(6)]
+    print(f"\n-- runtime: 6 requests x (48-token doc + 8-token question), "
+          f"16 new tokens")
+    print(f"{'prefix_cache':>13} {'prefill_toks':>13} {'peak_pages':>11} "
+          f"{'deduped':>8} {'ttft_p95_ms':>12}")
+    meas = {}
+    for pc in (False, True):
+        eng = ServeEngine(rcfg, params, opts, max_len=96,
+                          scheduler="continuous", page_size=16, max_batch=8,
+                          prefix_cache=pc)
+        eng.serve([r[:] for r in reqs], 16)
+        eng.stats.__init__()
+        eng.serve([r[:] for r in reqs], 16)
+        st = eng.stats
+        meas[pc] = st
+        print(f"{str(pc):>13} {st.prefill_tokens_computed:>13} "
+              f"{st.peak_pages_used:>11} {st.pages_deduped:>8} "
+              f"{st.ttft_p95*1e3:>12.1f}")
+    predicted = kv_dedup_factor(6, 56, 16, shared_prefix_len=48,
+                                share_group=6)
+    measured = (meas[True].peak_pages_used
+                / max(meas[False].peak_pages_used, 1))
+    print(f"   predicted KV dedup factor {predicted:.2f} vs measured "
+          f"peak-page ratio {measured:.2f}")
 
 
 def main() -> None:
@@ -102,8 +160,10 @@ def main() -> None:
                     help="analytical table only (no jit compiles)")
     args = ap.parse_args()
     analytical()
+    shared_prefix_analytical()
     if not args.skip_runtime:
         runtime()
+        shared_prefix_runtime()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""Serving smoke benchmark: continuous engine on a shared-document QA
+workload, prefix cache on vs off (DESIGN.md SS11).
+
+Emits the perf trajectory the CI tracks from PR 3 on: TPS, TTFT/ITL
+percentiles, prefill tokens actually computed, jitted-prefill compile
+count (fixed chunk shapes => 1), and page dedup — the runtime counterpart
+of the paper's concurrency-driven capacity pressure.
+
+Run: PYTHONPATH=src python benchmarks/serve_bench.py --json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.models import RuntimeOptions, init_params
+
+
+def run_workload(eng, reqs, new_tokens: int) -> dict:
+    eng.serve([r[:] for r in reqs], new_tokens)   # warm the jit caches
+    eng.stats.__init__()
+    eng.serve([r[:] for r in reqs], new_tokens)
+    s = eng.stats
+    return {
+        "tps": round(s.tps, 2),
+        "ttft_p50_ms": round(s.ttft_p50 * 1e3, 3),
+        "ttft_p95_ms": round(s.ttft_p95 * 1e3, 3),
+        "itl_p50_ms": round(s.itl_p50 * 1e3, 3),
+        "itl_p95_ms": round(s.itl_p95 * 1e3, 3),
+        "prefill_tokens_computed": s.prefill_tokens_computed,
+        "cached_prefix_tokens": s.cached_prefix_tokens,
+        "pages_deduped": s.pages_deduped,
+        "cow_copies": s.cow_copies,
+        "peak_pages_used": s.peak_pages_used,
+        "prefill_recompiles": s.prefill_compiles,
+        "preemptions": s.preemptions,
+        "decode_steps": s.decode_steps,
+    }
+
+
+def main() -> None:
+    import jax
+    from repro.serving import ServeEngine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None, help="write results to this JSON file")
+    ap.add_argument("--doc-len", type=int, default=48)
+    ap.add_argument("--n-requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), d_model=128, n_layers=4, vocab=512)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    rng = np.random.default_rng(0)
+    doc = rng.integers(1, cfg.vocab, size=args.doc_len).tolist()
+    reqs = [doc + rng.integers(1, cfg.vocab, size=8).tolist()
+            for _ in range(args.n_requests)]
+    max_len = args.doc_len + 8 + args.new_tokens + 16
+
+    results = {"workload": {
+        "arch": args.arch, "doc_len": args.doc_len,
+        "n_requests": args.n_requests, "question_len": 8,
+        "new_tokens": args.new_tokens}}
+    outs = {}
+    for key, pc in (("baseline_no_sharing", False), ("prefix_sharing", True)):
+        eng = ServeEngine(cfg, params, opts, max_len=max_len,
+                          scheduler="continuous", page_size=16, max_batch=8,
+                          prefix_cache=pc)
+        results[key] = run_workload(eng, reqs, args.new_tokens)
+        outs[pc] = eng.serve([r[:] for r in reqs], args.new_tokens)
+
+    base, shared = results["baseline_no_sharing"], results["prefix_sharing"]
+    results["derived"] = {
+        "outputs_token_identical": outs[False] == outs[True],
+        "prefill_tokens_saved_frac": round(
+            1 - shared["prefill_tokens_computed"]
+            / max(base["prefill_tokens_computed"], 1), 3),
+        "peak_pages_ratio": round(
+            shared["peak_pages_used"] / max(base["peak_pages_used"], 1), 3),
+    }
+
+    print(json.dumps(results, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[serve_bench] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ dry-run roofline deliverable."""
 from repro.core import (concurrency, memspec, placement, roofline, stco,
                         tiling, tpu_roofline, workload)
 from repro.core.concurrency import (ConcurrencyPoint, concurrency_sweep,
-                                    concurrent_inference,
+                                    concurrent_inference, kv_dedup_factor,
                                     max_concurrency_without_spill,
                                     placement_with_kv_split)
 from repro.core.memspec import (ComputeSpec, MemoryHierarchy, MemoryLevel,
@@ -23,7 +23,8 @@ __all__ = [
     "concurrency", "memspec", "placement", "roofline", "stco", "tiling",
     "tpu_roofline", "workload",
     "ConcurrencyPoint", "concurrency_sweep", "concurrent_inference",
-    "max_concurrency_without_spill", "placement_with_kv_split",
+    "kv_dedup_factor", "max_concurrency_without_spill",
+    "placement_with_kv_split",
     "ComputeSpec", "MemoryHierarchy", "MemoryLevel", "hbs", "lpddr6",
     "npu_hierarchy", "sram_chiplet", "ssd_pcie", "tpu_v5e_hierarchy",
     "Placement", "all_hbs", "capacity_aware", "chiplet_mlp_weights",

@@ -54,6 +54,27 @@ class ConcurrencyPoint:
         return self.report.bottleneck
 
 
+def kv_dedup_factor(n_concurrent: int, prefill_len: int, decode_len: int, *,
+                    shared_prefix_len: int = 0,
+                    share_group: int = 1) -> float:
+    """Unique / naive aggregate KV under prefix sharing.
+
+    The runtime's shared-prefix page reuse (serving.kv_manager) stores the
+    KV of a document prefix ONCE per document instead of once per request.
+    With ``n_concurrent`` requests in groups of ``share_group`` over the
+    same document (``shared_prefix_len`` tokens of the prompt), the unique
+    footprint is ``n*(ctx - p) + ceil(n/g)*p`` tokens against the naive
+    ``n*ctx`` — the factor the analytical sweep scales ``TC.KV`` by."""
+    ctx = prefill_len + decode_len
+    g = max(share_group, 1)
+    p = min(max(shared_prefix_len, 0), prefill_len)
+    if g <= 1 or p <= 0 or n_concurrent <= 0:
+        return 1.0
+    n = n_concurrent
+    n_docs = -(-n // g)
+    return (n * (ctx - p) + n_docs * p) / (n * ctx)
+
+
 def placement_with_kv_split(place: Placement,
                             kv_split: Sequence[Tuple[str, float]]
                             ) -> Placement:
@@ -68,8 +89,9 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
                          place: Placement, *, n_concurrent: int,
                          prefill_len: int, decode_len: int,
                          dtype_bytes: int = 2,
-                         kv_split: Optional[Sequence[Tuple[str, float]]] = None
-                         ) -> ConcurrencyPoint:
+                         kv_split: Optional[Sequence[Tuple[str, float]]] = None,
+                         shared_prefix_len: int = 0,
+                         share_group: int = 1) -> ConcurrencyPoint:
     """Serve ``n_concurrent`` simultaneous requests analytically.
 
     The aggregate KV footprint (``TC.KV`` scaled by batch) runs through
@@ -77,12 +99,20 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
     marginal request pays slow-tier attention traffic — the capacity-
     pressure curve the runtime engine measures.
 
+    ``shared_prefix_len``/``share_group`` model the runtime's prefix-page
+    dedup: the aggregate KV is scaled by ``kv_dedup_factor`` before the
+    capacity pass, so shared-document workloads spill later and fit more
+    concurrency (the headroom the paged pool actually realizes).
+
     A pinned ``kv_split`` bypasses the greedy KV split entirely: the KV
     class is removed from the capacity pass (its tier occupancy is instead
     pre-charged against each tier's capacity) and the runtime-observed
     split is applied on top."""
     ctx = prefill_len + decode_len
     fp = resident_bytes(cfg, ctx, n_concurrent, dtype_bytes)
+    fp[TC.KV] = fp[TC.KV] * kv_dedup_factor(
+        n_concurrent, prefill_len, decode_len,
+        shared_prefix_len=shared_prefix_len, share_group=share_group)
     if kv_split is not None:
         # charge the pinned KV residency against the tiers it occupies so
         # co-resident classes see the reduced capacity, then keep the KV
@@ -110,32 +140,48 @@ def concurrency_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
                       place: Placement, *,
                       concurrency: Iterable[int] = (1, 2, 4, 8, 16),
                       prefill_len: int = 2048, decode_len: int = 256,
-                      dtype_bytes: int = 2) -> List[ConcurrencyPoint]:
+                      dtype_bytes: int = 2, shared_prefix_len: int = 0,
+                      share_group: int = 1) -> List[ConcurrencyPoint]:
     """TPS-vs-concurrency curve (the paper's experiment, any hierarchy)."""
     return [concurrent_inference(cfg, hier, place, n_concurrent=n,
                                  prefill_len=prefill_len,
                                  decode_len=decode_len,
-                                 dtype_bytes=dtype_bytes)
+                                 dtype_bytes=dtype_bytes,
+                                 shared_prefix_len=shared_prefix_len,
+                                 share_group=share_group)
             for n in concurrency]
 
 
 def max_concurrency_without_spill(cfg: ArchConfig, hier: MemoryHierarchy,
                                   place: Placement, *, prefill_len: int,
                                   decode_len: int, dtype_bytes: int = 2,
-                                  limit: int = 4096) -> int:
-    """Largest concurrency whose aggregate KV still fits its preferred tier
-    (the runtime admission controller's analytical counterpart)."""
+                                  limit: int = 4096,
+                                  shared_prefix_len: int = 0,
+                                  share_group: int = 1) -> int:
+    """Largest concurrency whose aggregate (dedup'd) KV still fits its
+    preferred tier (the runtime admission controller's analytical
+    counterpart). Prefix sharing shrinks the marginal request's KV, so the
+    no-spill limit GROWS with the share factor — the extra concurrency the
+    paged pool fits before tier spill."""
     kv_level = place.mapping[TC.KV]
     cap = hier.level(kv_level).capacity
     if cap is None:
         return limit
     ctx = prefill_len + decode_len
-    per_req = float(cfg.kv_bytes_per_token(dtype_bytes)) * ctx
-    if per_req <= 0:
+    per_tok = float(cfg.kv_bytes_per_token(dtype_bytes))
+    if per_tok <= 0:
         return limit
     # the preferred tier also houses whatever other classes map to it
     fp1 = resident_bytes(cfg, ctx, 1, dtype_bytes)
     other = sum(v for c, v in fp1.items()
                 if c != TC.KV and place.mapping.get(c) == kv_level)
     avail = max(cap - other, 0.0)
-    return max(min(int(avail // per_req), limit), 0)
+    g = max(share_group, 1)
+    p = min(max(shared_prefix_len, 0), prefill_len) if g > 1 else 0
+    best = 0
+    for n in range(1, limit + 1):
+        unique_tokens = n * (ctx - p) + (-(-n // g)) * p
+        if unique_tokens * per_tok > avail:
+            break
+        best = n
+    return best

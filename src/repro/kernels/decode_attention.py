@@ -27,9 +27,10 @@ def _online_softmax_step(q, k, v, valid, base_pos, scale,
                          m_scr, l_scr, acc_scr):
     """One flash-attention block update against KV rows [base_pos, +len(k)).
 
-    q: (group, dh) f32; k/v: (bkv, dh) f32 (already dequantized); ``valid``
-    masks rows at absolute position >= valid. Shared by the dense-cache and
-    the paged-cache decode kernels."""
+    q: (rows, dh) f32; k/v: (bkv, dh) f32 (already dequantized); ``valid``
+    masks KV at absolute position >= valid — a scalar for a shared limit or
+    a (rows, 1) array for per-row (causal) limits. Shared by the
+    dense-cache decode, paged decode, and chunk-prefill kernels."""
     bkv = k.shape[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -96,14 +97,21 @@ def decode_attention(q, k_cache, v_cache, kv_valid, *, scale: float = None,
     L, Hkv = k_cache.shape[1], k_cache.shape[2]
     group = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    # non-multiple cache lengths: keep the lane-aligned block size and pad
+    # the KV tail instead (padded rows sit at kpos >= L >= kv_valid, so the
+    # kernel's validity mask already discards them) — shrinking block_kv to
+    # a divisor of L would degenerate to 1-row blocks for prime L
     block_kv = min(block_kv, L)
     n_kv = -(-L // block_kv)
-    assert L % block_kv == 0
     quantized = k_scale is not None
 
     qt = q.reshape(B, Hkv, group, dh)                  # (B,Hkv,g,dh)
     kt = k_cache.transpose(0, 2, 1, 3)                 # (B,Hkv,L,dh)
     vt = v_cache.transpose(0, 2, 1, 3)
+    if n_kv * block_kv != L:
+        pad = ((0, 0), (0, 0), (0, n_kv * block_kv - L), (0, 0))
+        kt = jnp.pad(kt, pad)
+        vt = jnp.pad(vt, pad)
     if k_scale is None:
         k_scale = jnp.ones((Hkv,), jnp.float32)
         v_scale = jnp.ones((Hkv,), jnp.float32)
@@ -233,6 +241,120 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
       k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
       qt, k_pages, v_pages)
     return out.reshape(B, H, dh)
+
+
+def _chunk_kernel(pt_ref, start_ref, len_ref, ksc_ref, vsc_ref, q_ref,
+                  k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, page_size: int, n_pages_per_seq: int,
+                  chunk: int, group: int, quantized: bool):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        _init_scratch(m_scr, l_scr, acc_scr)
+
+    start = start_ref[b]
+    nv = len_ref[b]
+    # pages strictly past the chunk's last query position hold no
+    # attendable KV (causal) — skip them
+    run = pi * page_size < start + chunk
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (chunk*group, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ksc_ref[0]
+            v = v * vsc_ref[0]
+        # per-row causal limit: query row r sits at absolute position
+        # start + r // group and may attend KV positions <= its own,
+        # clipped to the chunk's true (unpadded) extent
+        rows = jax.lax.broadcasted_iota(jnp.int32, (chunk * group, 1), 0)
+        valid = jnp.minimum(start + rows // group + 1, nv)
+        _online_softmax_step(q, k, v, valid, pi * page_size, scale,
+                             m_scr, l_scr, acc_scr)
+
+    @pl.when(pi == n_pages_per_seq - 1)
+    def _out():
+        _finalize(o_ref, l_scr, acc_scr)
+
+
+def chunk_prefill_attention(q, k_pages, v_pages, page_table, start, n_valid,
+                            *, scale: float = None, k_scale=None,
+                            v_scale=None, interpret: bool = False):
+    """Chunked-prefill attention: a q-block against a page-table KV cache.
+
+    q: (B, C, H, dh) — one fixed-size prefill chunk whose queries sit at
+    absolute positions [start, start + C); k/v_pages: (n_pages, page_size,
+    Hkv, dh) pooled pages (int8 when scales given) ALREADY containing the
+    chunk's own KV at those positions; page_table: (B, n_pages_per_seq)
+    int32 physical page ids; start: scalar or (B,) int32 first absolute
+    position of the chunk; n_valid: (B,) int32 total valid tokens once this
+    chunk lands (masks the chunk's right-padding). Returns (B, C, H, dh).
+
+    Each query attends causally — KV positions <= its own — across every
+    page the sequence owns, so a chunk sees the whole cached prefix (shared
+    prefix pages included) plus the in-chunk causal triangle. The page
+    table is a scalar-prefetch operand dereferenced by the K/V BlockSpec
+    ``index_map`` (same indirection as ``paged_decode_attention``); pages
+    past the chunk's last query are skipped, giving the flash-style
+    diagonal-band block skipping of the dense prefill kernel.
+    """
+    B, C, H, dh = q.shape
+    n_pages, page_size, Hkv = k_pages.shape[:3]
+    n_pp = page_table.shape[1]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    quantized = k_scale is not None
+
+    # rows ordered (position, head-in-group): row r -> position r // group
+    qt = (q.reshape(B, C, Hkv, group, dh).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, C * group, dh))
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
+    if k_scale is None:
+        k_scale = jnp.ones((Hkv,), jnp.float32)
+        v_scale = jnp.ones((Hkv,), jnp.float32)
+
+    kern = functools.partial(_chunk_kernel, scale=scale, page_size=page_size,
+                             n_pages_per_seq=n_pp, chunk=C, group=group,
+                             quantized=quantized)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,        # page_table, start, n_valid
+        grid=(B, Hkv, n_pp),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, pi, pt, st, ln: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h, pi, pt, st, ln: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, C * group, dh),
+                         lambda b, h, pi, pt, st, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, pi, pt, st, ln: (pt[b, pi], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, pi, pt, st, ln: (pt[b, pi], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C * group, dh),
+                               lambda b, h, pi, pt, st, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * group,), jnp.float32),
+            pltpu.VMEM((C * group,), jnp.float32),
+            pltpu.VMEM((C * group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, C * group, dh), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), start, n_valid.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      qt, k_pages, v_pages)
+    return (out.reshape(B, Hkv, C, group, dh).transpose(0, 2, 1, 3, 4)
+            .reshape(B, C, H, dh))
 
 
 def quantize_kv(k, v):

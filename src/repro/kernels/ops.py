@@ -81,3 +81,24 @@ def try_paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
     return paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
                                   scale=scale, k_scale=k_scale,
                                   v_scale=v_scale, interpret=_interpret())
+
+
+def try_chunk_prefill_attention(q, k_pages, v_pages, page_table, start,
+                                n_valid, *, scale: float, k_scale=None,
+                                v_scale=None) -> Optional[jax.Array]:
+    """Route to the chunked-prefill Pallas kernel (q-block x paged KV)."""
+    if not _pallas_ok():
+        return None
+    B, C, H, dh = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    if dh % 128 != 0 and dh not in (64, 128, 256):
+        return None
+    min_sublane = {1: 32, 2: 16}.get(jnp.dtype(k_pages.dtype).itemsize, 8)
+    if page_size % min_sublane != 0:
+        return None
+    if H % Hkv != 0:
+        return None
+    from repro.kernels.decode_attention import chunk_prefill_attention
+    return chunk_prefill_attention(q, k_pages, v_pages, page_table, start,
+                                   n_valid, scale=scale, k_scale=k_scale,
+                                   v_scale=v_scale, interpret=_interpret())

@@ -58,3 +58,31 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *,
     vd = gather_pages(v_pages, page_table)
     return decode_attention_ref(q, kd, vd, seq_lens, scale=scale,
                                 k_scale=k_scale, v_scale=v_scale)
+
+
+def chunk_prefill_attention_ref(q, k_pages, v_pages, page_table, start,
+                                n_valid, *, scale: float, k_scale=None,
+                                v_scale=None):
+    """Oracle for the chunk-prefill kernel: gather pages densely, causal
+    mask by absolute position. q: (B, C, H, dh); start: scalar or (B,);
+    n_valid: (B,) total valid tokens including this chunk."""
+    B, C, H, dh = q.shape
+    kd = gather_pages(k_pages, page_table).astype(jnp.float32)
+    vd = gather_pages(v_pages, page_table).astype(jnp.float32)
+    if k_scale is not None:
+        kd = kd * k_scale[None, None, :, None]
+    if v_scale is not None:
+        vd = vd * v_scale[None, None, :, None]
+    L, Hkv = kd.shape[1], kd.shape[2]
+    g = H // Hkv
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (B,))
+    qpos = start[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    qpos = jnp.minimum(qpos, n_valid[:, None] - 1)          # clip pad rows
+    kpos = jnp.arange(L)
+    mask = kpos[None, None, :] <= qpos[:, :, None]          # (B, C, L)
+    qg = q.reshape(B, C, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bchgd,blhd->bhgcl", qg, kd) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgcl,blhd->bchgd", p, vd)
+    return o.reshape(B, C, H, dh).astype(q.dtype)

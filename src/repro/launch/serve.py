@@ -42,23 +42,38 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8,
                     help="continuous scheduler slot count")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens per prefill chunk (continuous scheduler; "
+                         "default 2 pages, min 32)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prefill tokens per engine step")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV page reuse")
+    ap.add_argument("--shared-doc", type=int, default=0,
+                    help="prepend a shared document of this many tokens to "
+                         "every request (exercises prefix dedup)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, d_model=args.d_model)
-    max_len = args.prompt_len + args.new_tokens
+    max_len = args.prompt_len + args.new_tokens + args.shared_doc
     eng = ServeEngine(cfg, opts=RuntimeOptions(dtype=args.dtype),
                       kv_policy=args.kv_policy, max_len=max_len,
                       scheduler=args.scheduler, page_size=args.page_size,
-                      max_batch=args.max_batch)
+                      max_batch=args.max_batch,
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_budget=args.prefill_budget,
+                      prefix_cache=not args.no_prefix_cache)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
         # ragged request stream: lengths in [prompt_len // 2, prompt_len]
+        doc = rng.integers(1, cfg.vocab, size=args.shared_doc).tolist()
         lens = rng.integers(max(args.prompt_len // 2, 1),
                             args.prompt_len + 1, size=args.concurrency)
-        reqs = [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+        reqs = [doc + rng.integers(1, cfg.vocab, size=n).tolist()
+                for n in lens]
         outs = eng.serve(reqs, args.new_tokens)
     else:
         prompts = jax.random.randint(jax.random.PRNGKey(0),
@@ -75,6 +90,12 @@ def main() -> None:
           f"kv={args.kv_policy} reqs={s.requests} "
           f"prefill={s.prefill_s*1e3:.0f}ms decode={s.decode_s*1e3:.0f}ms "
           f"steps={s.decode_steps} preempt={s.preemptions} TPS={s.tps:.1f}")
+    if args.scheduler == "continuous":
+        print(f"[serve] prefill_toks={s.prefill_tokens_computed} "
+              f"cached={s.cached_prefix_tokens} deduped={s.pages_deduped} "
+              f"cow={s.cow_copies} compiles={s.prefill_compiles} "
+              f"ttft_p50/p95={s.ttft_p50*1e3:.1f}/{s.ttft_p95*1e3:.1f}ms "
+              f"itl_p50/p95={s.itl_p50*1e3:.1f}/{s.itl_p95*1e3:.1f}ms")
     print("[serve] first output:", outs[0][:16])
 
 

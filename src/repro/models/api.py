@@ -81,6 +81,19 @@ def decode_step_paged(cfg, params, token, seq_lens, page_table, cache,
                                              page_table, cache, opts)
 
 
+def prefill_paged_chunk(cfg, params, tokens, cache, page_table, start,
+                        n_valid, opts=RuntimeOptions(), *,
+                        calibrate: bool = False):
+    return module_for(cfg).prefill_paged_chunk(cfg, params, tokens, cache,
+                                               page_table, start, n_valid,
+                                               opts, calibrate=calibrate)
+
+
+def copy_pages(cfg, cache, pairs):
+    """Apply (src, dst) COW page copies to the pooled cache."""
+    return module_for(cfg).copy_pages(cache, pairs)
+
+
 # --------------------------- input specs ------------------------------- #
 
 @dataclass(frozen=True)

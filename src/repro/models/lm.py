@@ -558,6 +558,130 @@ def prefill_paged(cfg: ArchConfig, params, tokens, cache, page_table,
     return last, {"stack": new}
 
 
+def _paged_chunk_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
+                      cache_layer, positions, page_table, start, n_valid, *,
+                      calibrate: bool):
+    """Chunk-prefill attention against pooled KV pages. x: (B, C, d).
+
+    Scatters the chunk's KV into the pages covering ``positions`` first,
+    then attends causally (by absolute position) across every page the
+    sequence owns — previously cached prefix pages included."""
+    B, C, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = cm.dense(p["wq"], x).reshape(B, C, H, hd)
+    k = cm.dense(p["wk"], x).reshape(B, C, Hkv, hd)
+    v = cm.dense(p["wv"], x).reshape(B, C, Hkv, hd)
+    q = cm.apply_rope(q, positions)
+    k = cm.apply_rope(k, positions)
+    quant = "k_scale" in cache_layer
+    kp, vp = cache_layer["k"], cache_layer["v"]
+    P, ps = kp.shape[0], kp.shape[1]
+    n_pp = page_table.shape[1]
+
+    if quant:
+        if calibrate:
+            # first chunk of the pool's life sets the frozen scales; keep
+            # the chunk's right-padding out of them
+            ok = (positions < n_valid[:, None])[..., None, None]
+            ksc = _amax_scale(jnp.where(ok, k, 0), (0, 1, 3))
+            vsc = _amax_scale(jnp.where(ok, v, 0), (0, 1, 3))
+        else:
+            ksc, vsc = cache_layer["k_scale"], cache_layer["v_scale"]
+        k_store = _quantize_with(k, ksc[None, None]).astype(jnp.int8)
+        v_store = _quantize_with(v, vsc[None, None]).astype(jnp.int8)
+    else:
+        ksc = vsc = None
+        k_store, v_store = k.astype(kp.dtype), v.astype(vp.dtype)
+
+    # scatter the chunk's KV at absolute positions [start, start + C); pad
+    # positions past the reserve land on the null page (entries past the
+    # sequence's pages are 0, and positions past the table are clipped to 0
+    # explicitly — gather would silently clamp to the LAST entry)
+    blk = positions // ps
+    pid = jnp.take_along_axis(page_table, jnp.minimum(blk, n_pp - 1), axis=1)
+    pid = jnp.where(blk < n_pp, pid, 0)                             # (B, C)
+    flat = (pid * ps + positions % ps).reshape(-1)
+    kp = (kp.reshape(P * ps, Hkv, hd).at[flat]
+          .set(k_store.reshape(B * C, Hkv, hd)).reshape(kp.shape))
+    vp = (vp.reshape(P * ps, Hkv, hd).at[flat]
+          .set(v_store.reshape(B * C, Hkv, hd)).reshape(vp.shape))
+
+    out = None
+    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
+        from repro.kernels import ops as kops
+        out = kops.try_chunk_prefill_attention(
+            q, kp, vp, page_table, start, n_valid, scale=hd ** -0.5,
+            k_scale=ksc, v_scale=vsc)
+    if out is None:
+        # XLA path: gather the pages densely, causal-mask by position
+        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        if quant:
+            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
+            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
+        else:
+            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
+        out = cm.attention(q, kd, vd, mask_kind="causal", q_offset=start,
+                           kv_valid=n_valid, softcap=cfg.logit_softcap,
+                           impl="xla")
+    out = cm.dense(p["wo"], out.reshape(B, C, H * hd))
+    new_cache = {"k": kp, "v": vp}
+    if quant:
+        new_cache["k_scale"] = ksc
+        new_cache["v_scale"] = vsc
+    return out, new_cache
+
+
+def prefill_paged_chunk(cfg: ArchConfig, params, tokens, cache, page_table,
+                        start, n_valid,
+                        opts: RuntimeOptions = RuntimeOptions(), *,
+                        calibrate: bool = False):
+    """One fixed-size prefill chunk against the paged pool (DESIGN.md SS11).
+
+    tokens: (B, C) the chunk's tokens, right-padded; page_table: (B,
+    n_pages_per_seq) the sequence's full padded table; start: scalar int32
+    absolute position of tokens[:, 0] (earlier positions already hold valid
+    KV — from previous chunks or shared prefix pages); n_valid: (B,) total
+    valid tokens once this chunk lands (= start + true chunk length).
+
+    The fixed (B, C) shape is the point: every prompt, whatever its length
+    or cache hit, prefills through this one compiled program instead of
+    compiling per padded prompt length. ``calibrate=True`` (first chunk
+    only) sets the int8 scales. Returns (logits (B, C, vocab), new cache).
+    """
+    B, C = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, None)
+    start = jnp.asarray(start, jnp.int32)
+    positions = jnp.broadcast_to(start + jnp.arange(C)[None, :], (B, C))
+
+    def scan_body(carry, xs):
+        lp, cl = xs
+        h = cm.constrain(carry, opts.residual_sharding)
+        a, nc = _paged_chunk_attn(lp["attn"], cm.rms_norm(h, lp["ln1"]),
+                                  cfg, opts, cl, positions, page_table,
+                                  start, n_valid, calibrate=calibrate)
+        h = h + a
+        f, _ = _ffn_apply(lp, cm.rms_norm(h, lp["ln2"]), cfg, opts)
+        return h + f, nc
+    x, new_stack = jax.lax.scan(scan_body, x, (params["stack"],
+                                               cache["stack"]))
+    logits = _logits(cfg, params, x)
+    return logits, {"stack": new_stack}
+
+
+def copy_pages(cache, pairs):
+    """Apply queued copy-on-write page copies to the pool.
+
+    pairs: (N, 2) int32 (src, dst) physical page ids — the output of
+    ``PagedKVManager.drain_copies``. Must run before the next KV write."""
+    st = cache["stack"]
+    src, dst = pairs[:, 0], pairs[:, 1]
+    new = dict(st)
+    new["k"] = st["k"].at[:, dst].set(st["k"][:, src])
+    new["v"] = st["v"].at[:, dst].set(st["v"][:, src])
+    return {"stack": new}
+
+
 def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
                        cache_layer, seq_lens, page_table):
     """Single-token attention against pooled KV pages. x: (B, 1, d)."""

@@ -1,8 +1,9 @@
 from repro.serving.engine import ServeEngine, ServeStats
 from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
-                                      TierBudget, page_bytes)
+                                      PrefixAllocation, TierBudget,
+                                      page_bytes)
 from repro.serving.scheduler import ContinuousScheduler, Request
 
 __all__ = ["ServeEngine", "ServeStats", "PageAllocationError",
-           "PagedKVManager", "TierBudget", "page_bytes",
+           "PagedKVManager", "PrefixAllocation", "TierBudget", "page_bytes",
            "ContinuousScheduler", "Request"]

@@ -34,11 +34,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import (RuntimeOptions, decode_step, decode_step_paged,
-                          init_cache, init_paged_cache, init_params,
-                          paged_supported, prefill, prefill_paged)
+from repro.models import (RuntimeOptions, copy_pages, decode_step,
+                          decode_step_paged, init_cache, init_paged_cache,
+                          init_params, paged_supported, prefill,
+                          prefill_paged, prefill_paged_chunk)
 from repro.serving.kv_manager import PagedKVManager, TierBudget
-from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.scheduler import (PREFILLING, RUNNING, ContinuousScheduler,
+                                     Request)
 
 
 @dataclass
@@ -49,12 +51,41 @@ class ServeStats:
     requests: int = 0
     decode_steps: int = 0
     preemptions: int = 0
+    # chunked prefill + prefix sharing observability (continuous scheduler)
+    prefill_tokens_computed: int = 0    # chunk tokens actually run
+    cached_prefix_tokens: int = 0       # prompt tokens served from the cache
+    pages_deduped: int = 0              # page allocations avoided by sharing
+    cow_copies: int = 0
+    peak_pages_used: int = 0            # max distinct in-use pages
+    prefill_compiles: int = 0           # distinct jitted prefill shapes
+    # per-request latency samples (seconds)
+    ttft: List[float] = field(default_factory=list)
+    itl: List[float] = field(default_factory=list)
 
     @property
     def tps(self) -> float:
         """Decode tokens/sec over the full request (paper's metric)."""
         t = self.prefill_s + self.decode_s
         return self.new_tokens / t if t > 0 else 0.0
+
+    def _pct(self, xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttft, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._pct(self.ttft, 95)
+
+    @property
+    def itl_p50(self) -> float:
+        return self._pct(self.itl, 50)
+
+    @property
+    def itl_p95(self) -> float:
+        return self._pct(self.itl, 95)
 
 
 class ServeEngine:
@@ -64,7 +95,9 @@ class ServeEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  scheduler: str = "static", page_size: int = 16,
                  max_batch: int = 8, n_pages: Optional[int] = None,
-                 hierarchy=None):
+                 hierarchy=None, prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
+                 prefix_cache: bool = True):
         if kv_policy == "int8":
             import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
@@ -87,7 +120,17 @@ class ServeEngine:
         self._prefill = jax.jit(partial(prefill, cfg, opts=opts))
         self._decode = jax.jit(partial(decode_step, cfg, opts=opts),
                                donate_argnums=(3,))
-        # paged path (continuous scheduler)
+        # paged path (continuous scheduler); chunk right-padding needs no
+        # reserve headroom — positions past a prompt's pages spill into the
+        # reserved null page
+        self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                              else max(2 * page_size, 32))
+        if self.prefill_chunk % page_size:
+            raise ValueError(
+                f"prefill_chunk ({self.prefill_chunk}) must be a multiple "
+                f"of page_size ({page_size})")
+        self.prefill_budget = prefill_budget
+        self.prefix_cache = prefix_cache
         self.n_pages_per_seq = -(-max_len // page_size)
         kv_bytes = (jnp.dtype(opts.cache_dtype).itemsize if opts.cache_dtype
                     else opts.jdtype.itemsize)     # int8 -> 1 via dtype
@@ -100,8 +143,14 @@ class ServeEngine:
         self._prefill_paged = jax.jit(
             partial(prefill_paged, cfg, opts=opts),
             static_argnames=("calibrate",), donate_argnums=(2,))
+        self._prefill_chunk = jax.jit(
+            partial(prefill_paged_chunk, cfg, opts=opts),
+            static_argnames=("calibrate",), donate_argnums=(2,))
         self._decode_paged = jax.jit(
             partial(decode_step_paged, cfg, opts=opts), donate_argnums=(4,))
+        self._copy_pages = jax.jit(partial(copy_pages, cfg),
+                                   donate_argnums=(0,))
+        self._chunk_shapes: set = set()   # distinct jitted prefill shapes
         self.kv_manager: Optional[PagedKVManager] = None  # set per serve()
         self.stats = ServeStats()
 
@@ -176,14 +225,25 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def serve_continuous(self, requests: List[List[int]],
                          max_new_tokens: int) -> List[List[int]]:
-        """Continuous batching over the paged, tiered KV pool."""
+        """Continuous batching over the paged, tiered, prefix-shared KV
+        pool with chunked prefill (DESIGN.md SS10/SS11).
+
+        Admissions do not monopolize the loop: each step spends at most
+        ``prefill_budget`` tokens advancing PREFILLING slots by fixed-size
+        chunks, then runs one ragged decode step over the RUNNING slots.
+        Prompts sharing an already-seen prefix skip both the recompute and
+        the pages (refcounted reuse; COW on mid-page divergence)."""
         ps, n_pp = self.page_size, self.n_pages_per_seq
         B = self.max_batch
-        kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget)
+        C = self.prefill_chunk
+        kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget,
+                            enable_prefix_cache=self.prefix_cache)
         self.kv_manager = kv
-        sched = ContinuousScheduler(kv, B)
+        sched = ContinuousScheduler(kv, B, prefill_chunk=C,
+                                    prefill_budget=self.prefill_budget)
         cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
+        now = time.perf_counter
 
         for i, r in enumerate(requests):
             total = len(r) + max_new_tokens
@@ -191,76 +251,131 @@ class ServeEngine:
                 raise ValueError(f"request {i}: prompt({len(r)}) + "
                                  f"new({max_new_tokens}) exceeds "
                                  f"max_len={self.max_len}")
-            sched.submit(Request(rid=i, prompt=list(r),
-                                 max_new_tokens=max_new_tokens))
+            req = Request(rid=i, prompt=list(r),
+                          max_new_tokens=max_new_tokens)
+            req.t_submit = now()
+            sched.submit(req)
 
         def finished(req: Request, tok: int) -> bool:
             return (req.remaining <= 0
                     or (self.eos_id is not None and tok == self.eos_id))
 
-        while sched.has_work:
-            # ---- admit + prefill newly joined requests ---- #
-            for slot, req in sched.admit():
-                pf = req.prefill_tokens
-                # the pages admit() reserved are the single source of truth
-                # for the page-aligned prefill length
-                padded = len(kv.seq_pages(req.rid)) * ps
-                toks = np.zeros((1, padded), np.int32)
-                toks[0, :len(pf)] = pf
-                pt = kv.table_row(req.rid, padded // ps)[None]
-                t0 = time.perf_counter()
-                logits, cache = self._prefill_paged(
-                    self.params, jnp.asarray(toks), cache, jnp.asarray(pt),
-                    jnp.asarray([len(pf)], jnp.int32),
-                    calibrate=not calibrated)
-                logits.block_until_ready()
-                calibrated = True
-                self.stats.prefill_s += time.perf_counter() - t0
-                tok = int(np.argmax(np.asarray(logits[0])))
-                req.out.append(tok)
-                self.stats.new_tokens += 1
-                if finished(req, tok):
-                    sched.retire(slot)
+        def emit(req: Request, tok: int) -> None:
+            t = now()
+            if not req.out:                      # very first token: TTFT
+                self.stats.ttft.append(t - req.t_submit)
+            elif req.t_last:
+                self.stats.itl.append(t - req.t_last)
+            req.t_last = t
+            req.out.append(tok)
+            self.stats.new_tokens += 1
 
-            if not sched.slots:
-                if sched.waiting:      # nothing running yet pool blocked:
-                    continue           # admit() will retry (pages now free)
+        def apply_copies():
+            nonlocal cache
+            pairs = kv.drain_copies()
+            if pairs:
+                # pad to a power-of-two batch with null-page self-copies so
+                # the jitted scatter sees O(log) distinct shapes, not one
+                # compile per COW-batch size
+                n = 1
+                while n < len(pairs):
+                    n *= 2
+                pairs = pairs + [(0, 0)] * (n - len(pairs))
+                cache = self._copy_pages(cache,
+                                         jnp.asarray(pairs, jnp.int32))
+
+        while sched.has_work:
+            sched.admit()
+            apply_copies()       # COW copies must land before any KV write
+
+            # ---- chunked prefill, bounded by the per-step budget ---- #
+            budget = sched.prefill_budget
+            for slot, req in sched.prefilling():
+                if budget < C:
+                    break
+                pf = req.prefill_tokens
+                F = len(pf)
+                while budget >= C and req.state == PREFILLING:
+                    start = req.n_prefilled
+                    n_real = min(C, F - start)
+                    toks = np.zeros((1, C), np.int32)
+                    toks[0, :n_real] = pf[start:start + n_real]
+                    pt = kv.table_row(req.rid, n_pp)[None]
+                    self._chunk_shapes.add(((1, C), not calibrated))
+                    t0 = now()
+                    logits, cache = self._prefill_chunk(
+                        self.params, jnp.asarray(toks), cache,
+                        jnp.asarray(pt), jnp.int32(start),
+                        jnp.asarray([start + n_real], jnp.int32),
+                        calibrate=not calibrated)
+                    logits.block_until_ready()
+                    calibrated = True
+                    self.stats.prefill_s += now() - t0
+                    self.stats.prefill_tokens_computed += n_real
+                    budget -= C
+                    req.n_prefilled = start + n_real
+                    # index finished full pages right away so concurrent
+                    # shared-prefix admissions hit them mid-prefill
+                    kv.register_prefix(req.rid, pf,
+                                       n_valid=req.n_prefilled)
+                    if req.n_prefilled >= F:
+                        sched.finish_prefill(slot)
+                        tok = int(np.argmax(
+                            np.asarray(logits[0, F - 1 - start])))
+                        emit(req, tok)
+                        if finished(req, tok):
+                            sched.retire(slot)
+
+            running = sched.running()
+            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
+                                             kv.n_used)
+            if not running:
+                if sched.has_work:
+                    continue     # prefills advance / admissions retry
                 break
 
             # ---- account the pending token's KV write (may preempt) ---- #
-            before = dict(sched.slots)
-            for slot in list(sched.slots):
+            # LIFO preemption may evict ANY slot, including a just-admitted
+            # PREFILLING one — diff the full slot table, not just RUNNING
+            before = set(sched.slots)
+            for slot, _ in running:
                 if slot in sched.slots:     # may have been preempted
                     sched.grow_seq(slot)
             self.stats.preemptions += sum(
                 1 for s in before if s not in sched.slots)
+            running = [(s, r) for s, r in running
+                       if s in sched.slots and r.state == RUNNING]
+            apply_copies()
+            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
+                                             kv.n_used)
 
-            # ---- one ragged decode step over all active slots ---- #
+            # ---- one ragged decode step over the RUNNING slots ---- #
             tokens = np.zeros((B,), np.int32)
             seq_lens = np.zeros((B,), np.int32)
             tables = np.zeros((B, n_pp), np.int32)
-            for slot, req in sched.slots.items():
+            for slot, req in running:
                 tokens[slot] = req.out[-1]
                 seq_lens[slot] = kv.seq_len(req.rid) - 1  # write position
-                row = kv.table_row(req.rid, n_pp)
-                tables[slot] = row
-            t0 = time.perf_counter()
+                tables[slot] = kv.table_row(req.rid, n_pp)
+            t0 = now()
             logits, cache = self._decode_paged(
                 self.params, jnp.asarray(tokens), jnp.asarray(seq_lens),
                 jnp.asarray(tables), cache)
             logits_np = np.asarray(logits)
-            self.stats.decode_s += time.perf_counter() - t0
+            self.stats.decode_s += now() - t0
             self.stats.decode_steps += 1
 
-            for slot in list(sched.slots):
-                req = sched.slots[slot]
+            for slot, req in running:
                 tok = int(np.argmax(logits_np[slot]))
-                req.out.append(tok)
-                self.stats.new_tokens += 1
+                emit(req, tok)
                 if finished(req, tok):
                     sched.retire(slot)
 
         self.stats.requests += len(requests)
+        self.stats.cached_prefix_tokens += kv.dedup_tokens
+        self.stats.pages_deduped += kv.dedup_hits
+        self.stats.cow_copies += kv.cow_copies
+        self.stats.prefill_compiles = len(self._chunk_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"
         assert kv.n_used == 0, "page leak: retired sequences kept pages"
         by_rid = {req.rid: req.out for req in sched.done}

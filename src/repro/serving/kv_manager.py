@@ -1,4 +1,5 @@
-"""Paged, tiered KV-cache manager (DESIGN.md SS10).
+"""Paged, tiered KV-cache manager with shared-prefix page reuse
+(DESIGN.md SS10/SS11).
 
 The runtime half of the paper's capacity-pressure story: the KV cache is a
 pool of fixed-size pages shared by all in-flight sequences, indirected
@@ -9,6 +10,16 @@ split* — the same ``((level, fraction), ...)`` shape the analytical
 placement model consumes — so runtime admission pressure and analytical
 spill predictions are computed from one source of truth.
 
+Prefix sharing (SS11) attacks the capacity term directly: pages are
+refcounted, full pages of completed prefixes are registered in a
+hash-chained index (block content + every block before it), and a new
+request whose prompt matches a chain *reuses the physical pages* instead
+of recomputing and re-storing identical KV. Divergence mid-page is handled
+copy-on-write: the manager hands the sequence a private copy of the
+partially-matching page and records the (src, dst) device copy for the
+engine to apply. Retired prefixes stay cached at refcount 0 (evictable,
+LRU) until allocation pressure reclaims them.
+
 Host-side bookkeeping is plain Python (free list + dicts); the page pool
 arrays themselves live in the model cache (``models.init_paged_cache``).
 Page 0 is reserved as the null page: padded page-table entries point at it,
@@ -16,6 +27,8 @@ inactive slots write into it, and nothing ever reads it unmasked.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -86,16 +99,35 @@ class _SeqAlloc:
     n_tokens: int = 0
 
 
-class PagedKVManager:
-    """Free-list page allocator with per-sequence page tables.
+@dataclass(frozen=True)
+class PrefixAllocation:
+    """Result of a prefix-aware allocation."""
+    pages: Tuple[int, ...]       # the sequence's full page list
+    n_cached: int                # leading tokens whose KV is already valid
 
-    Invariants (tested): every page is either free or owned by exactly one
-    sequence; ``n_free + n_used == n_pages - 1`` (page 0 reserved);
-    ``free_seq`` returns every page a sequence owned.
+
+def _chain_digest(parent: bytes, block: Sequence[int]) -> bytes:
+    """Position-aware content hash: a block's key commits to every token
+    before it, so identical blocks at different depths never collide."""
+    h = hashlib.sha256(parent)
+    h.update(np.asarray(block, np.int64).tobytes())
+    return h.digest()
+
+
+class PagedKVManager:
+    """Refcounted free-list page allocator with per-sequence page tables
+    and an optional shared-prefix page cache.
+
+    Invariants (tested): every page is free, evictable (cached at
+    refcount 0), or referenced by >=1 sequence; ``n_free + n_evictable +
+    n_used == n_pages - 1`` (page 0 reserved); a page's refcount equals the
+    number of sequences holding it; ``free_seq`` drops exactly one
+    reference per page the sequence held.
     """
 
     def __init__(self, n_pages: int, page_size: int, *,
-                 tier_budget: Optional[TierBudget] = None):
+                 tier_budget: Optional[TierBudget] = None,
+                 enable_prefix_cache: bool = False):
         if tier_budget is not None:
             n_pages = min(n_pages, tier_budget.total_pages + 1)
         if n_pages < 2:
@@ -103,8 +135,26 @@ class PagedKVManager:
         self.n_pages = n_pages
         self.page_size = page_size
         self.tier_budget = tier_budget
+        self.enable_prefix_cache = enable_prefix_cache
         self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> 1
         self._seqs: Dict[int, _SeqAlloc] = {}
+        self._ref: Dict[int, int] = {}                 # page -> refcount
+        self._n_used = 0                               # O(1) distinct in-use
+        # prefix cache: chain digest -> page; reverse map; per-parent
+        # children (for partial-page matching); block token contents
+        self._index: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self._children: Dict[bytes, Dict[bytes, int]] = {}
+        self._parent_key: Dict[bytes, bytes] = {}      # O(1) unregister
+        self._block_tokens: Dict[bytes, Tuple[int, ...]] = {}
+        self._evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        # device copies the engine must apply before the next KV write
+        self._pending_copies: List[Tuple[int, int]] = []
+        # observability (reset by the engine per serve)
+        self.dedup_hits = 0        # pages reused instead of recomputed
+        self.dedup_tokens = 0      # prompt tokens whose prefill was skipped
+        self.cow_copies = 0
+        self.evictions = 0
 
     # ------------------------------ queries ---------------------------- #
     @property
@@ -112,14 +162,26 @@ class PagedKVManager:
         return len(self._free)
 
     @property
+    def n_evictable(self) -> int:
+        return len(self._evictable)
+
+    @property
+    def n_allocatable(self) -> int:
+        """Pages an allocation may claim: free + evictable cached pages."""
+        return len(self._free) + len(self._evictable)
+
+    @property
     def n_used(self) -> int:
-        return sum(len(s.pages) for s in self._seqs.values())
+        """Distinct pages referenced by >=1 sequence. O(1) (maintained
+        counter — this runs inside the per-step ``kv_tier_split`` path)."""
+        return self._n_used
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
     def can_admit(self, n_tokens: int, headroom_pages: int = 0) -> bool:
-        return self.pages_needed(n_tokens) + headroom_pages <= self.n_free
+        return (self.pages_needed(n_tokens) + headroom_pages
+                <= self.n_allocatable)
 
     def fits_at_all(self, n_tokens: int) -> bool:
         """Could the request EVER run, with the whole pool to itself?"""
@@ -131,42 +193,267 @@ class PagedKVManager:
     def seq_pages(self, seq_id: int) -> List[int]:
         return list(self._seqs[seq_id].pages)
 
+    def page_ref(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._page_key
+
+    # --------------------------- page lifecycle ------------------------ #
+    def _take_page(self) -> int:
+        """Claim a page: free list first, else evict the LRU cached page."""
+        if self._free:
+            return self._free.pop()
+        if self._evictable:
+            page, _ = self._evictable.popitem(last=False)
+            self._unregister_page(page)
+            self.evictions += 1
+            return page
+        raise PageAllocationError("page pool exhausted")
+
+    def _incref(self, page: int) -> None:
+        if self._ref.get(page, 0) == 0:
+            self._evictable.pop(page, None)   # revived from the cache
+            self._n_used += 1
+        self._ref[page] = self._ref.get(page, 0) + 1
+
+    def _decref(self, page: int) -> None:
+        r = self._ref[page] - 1
+        if r < 0:
+            raise AssertionError(f"page {page} double-freed")
+        if r == 0:
+            del self._ref[page]
+            self._n_used -= 1
+            if page in self._page_key:        # stays cached, evictable
+                self._evictable[page] = None
+            else:
+                self._free.append(page)
+        else:
+            self._ref[page] = r
+
+    def _unregister_page(self, page: int) -> None:
+        """Eviction runs on the per-token allocation path — O(1)."""
+        key = self._page_key.pop(page, None)
+        if key is None:
+            return
+        self._index.pop(key, None)
+        self._block_tokens.pop(key, None)
+        parent = self._parent_key.pop(key)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.pop(key, None)
+            if not kids:
+                del self._children[parent]
+
     # ---------------------------- allocation --------------------------- #
     def allocate(self, seq_id: int, n_tokens: int, *,
                  reserve_tokens: Optional[int] = None) -> List[int]:
-        """Claim pages for a prefill. Pages are sized for ``reserve_tokens``
-        (e.g. the page-aligned padded prompt) while ``n_tokens`` records the
-        real sequence length. Raises on exhaustion."""
+        """Claim fresh pages for a prefill. Pages are sized for
+        ``reserve_tokens`` (e.g. the page-aligned padded prompt) while
+        ``n_tokens`` records the real sequence length. Raises on
+        exhaustion."""
         if seq_id in self._seqs:
             raise ValueError(f"sequence {seq_id} already allocated")
         need = self.pages_needed(max(reserve_tokens or 0, n_tokens))
-        if need > self.n_free:
+        if need > self.n_allocatable:
             raise PageAllocationError(
-                f"need {need} pages for seq {seq_id}, only {self.n_free} free")
-        pages = [self._free.pop() for _ in range(need)]
+                f"need {need} pages for seq {seq_id}, "
+                f"only {self.n_allocatable} allocatable")
+        pages = []
+        for _ in range(need):
+            p = self._take_page()
+            self._incref(p)
+            pages.append(p)
         self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens)
         return list(pages)
 
+    def allocate_shared(self, seq_id: int, tokens: Sequence[int], *,
+                        reserve_tokens: Optional[int] = None
+                        ) -> PrefixAllocation:
+        """Prefix-aware allocation: reuse cached pages for the longest
+        indexed prefix of ``tokens`` (full pages shared by reference,
+        a partially-matching page copy-on-write), fresh pages for the rest.
+
+        ``n_cached`` is capped at ``len(tokens) - 1`` so at least the last
+        token is always recomputed (its logits seed generation). Raises on
+        exhaustion with nothing claimed."""
+        if seq_id in self._seqs:
+            raise ValueError(f"sequence {seq_id} already allocated")
+        ps = self.page_size
+        n_tokens = len(tokens)
+        if not self.enable_prefix_cache:
+            pages = self.allocate(seq_id, n_tokens,
+                                  reserve_tokens=reserve_tokens)
+            return PrefixAllocation(tuple(pages), 0)
+
+        # walk the chain over full blocks (cap: keep >=1 token to compute)
+        shared: List[int] = []
+        parent = b""
+        for b in range((n_tokens - 1) // ps):
+            key = _chain_digest(parent, tokens[b * ps:(b + 1) * ps])
+            page = self._index.get(key)
+            if page is None:
+                break
+            shared.append(page)
+            parent = key
+        n_cached = len(shared) * ps
+
+        # partial-page match: a cached child block sharing a strict prefix
+        # of the request's next block -> copy-on-write a private page
+        # (a full-block match is impossible here — the chain walk above
+        # would have taken it)
+        cow_src: Optional[int] = None
+        partial = 0
+        rest = tuple(tokens[n_cached:n_cached + ps])
+        for key in self._children.get(parent, {}):
+            blk = self._block_tokens.get(key, ())
+            t = 0
+            for a, c in zip(blk, rest):
+                if a != c:
+                    break
+                t += 1
+            t = min(t, n_tokens - 1 - n_cached)
+            if t > partial:
+                cow_src, partial = self._index[key], t
+        if partial <= 0:
+            cow_src = None
+
+        need_total = self.pages_needed(max(reserve_tokens or 0, n_tokens))
+
+        # atomic claim: check capacity up front (reviving an evictable
+        # shared page shrinks the allocatable set without a _take_page)
+        need_fresh = need_total - len(shared)   # incl. the COW copy, if any
+        revived = sum(1 for p in shared if p in self._evictable)
+        if need_fresh + revived > self.n_allocatable:
+            raise PageAllocationError(
+                f"need {need_fresh} pages for seq {seq_id}, only "
+                f"{self.n_allocatable - revived} allocatable")
+        for p in shared:
+            self._incref(p)
+        pages = list(shared)
+        if cow_src is not None:
+            dst = self._take_page()
+            self._incref(dst)
+            self._pending_copies.append((cow_src, dst))
+            self.cow_copies += 1
+            pages.append(dst)
+            need_fresh -= 1
+        for _ in range(need_fresh):
+            p = self._take_page()
+            self._incref(p)
+            pages.append(p)
+        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens)
+        self.dedup_hits += len(shared)
+        self.dedup_tokens += n_cached + partial
+        return PrefixAllocation(tuple(pages), n_cached + partial)
+
+    def ensure_writable(self, seq_id: int, pos: int
+                        ) -> Optional[Tuple[int, int]]:
+        """Make the page covering token ``pos`` privately writable.
+
+        Shared pages (refcount > 1) are copied-on-write: a fresh page is
+        claimed, the (src, dst) device copy is queued, and the sequence's
+        table is rewritten. A cached-but-exclusive page is unregistered
+        instead (writing would silently diverge it from its content hash).
+        Returns the (src, dst) pair when a copy was made, else None."""
+        s = self._seqs[seq_id]
+        idx = pos // self.page_size
+        page = s.pages[idx]
+        if self._ref.get(page, 0) > 1:
+            dst = self._take_page()
+            self._incref(dst)
+            self._decref(page)
+            s.pages[idx] = dst
+            self._pending_copies.append((page, dst))
+            self.cow_copies += 1
+            return (page, dst)
+        if page in self._page_key:
+            self._unregister_page(page)
+        return None
+
     def append_token(self, seq_id: int) -> Optional[int]:
         """Extend a sequence by one token; returns the newly claimed page id
-        when a page boundary is crossed, else None. Raises on exhaustion
-        (the scheduler preempts and retries)."""
+        when a page boundary is crossed, else None. Writes into a shared
+        page trigger copy-on-write (the copy lands in ``drain_copies``).
+        Raises on exhaustion (the scheduler preempts and retries)."""
         s = self._seqs[seq_id]
         new_page = None
         if self.pages_needed(s.n_tokens + 1) > len(s.pages):
-            if not self._free:
-                raise PageAllocationError(
-                    f"page pool exhausted extending seq {seq_id}")
-            new_page = self._free.pop()
+            new_page = self._take_page()
+            self._incref(new_page)
             s.pages.append(new_page)
+        else:
+            self.ensure_writable(seq_id, s.n_tokens)
         s.n_tokens += 1
         return new_page
 
     def free_seq(self, seq_id: int) -> int:
-        """Release all pages of a retired/preempted sequence."""
+        """Drop a retired/preempted sequence's references. Cached pages
+        whose refcount hits zero become evictable; the rest return to the
+        free list. Pages are released deepest-first so LRU eviction
+        reclaims the END of a cached chain before its head — a chain is
+        only matchable through its prefix, so head pages are the valuable
+        ones."""
         s = self._seqs.pop(seq_id)
-        self._free.extend(s.pages)
+        for p in reversed(s.pages):
+            self._decref(p)
         return len(s.pages)
+
+    def drain_copies(self) -> List[Tuple[int, int]]:
+        """(src, dst) page copies queued by COW since the last drain. The
+        engine must apply them to the device pool before the next write."""
+        out, self._pending_copies = self._pending_copies, []
+        return out
+
+    # --------------------------- prefix cache -------------------------- #
+    def register_prefix(self, seq_id: int, tokens: Sequence[int],
+                        n_valid: Optional[int] = None) -> int:
+        """Index the sequence's full pages under their chained block hashes
+        so later prompts can reuse them. ``n_valid`` caps how many leading
+        tokens actually hold valid KV (defaults to the tracked length).
+        Returns the number of newly indexed pages."""
+        if not self.enable_prefix_cache:
+            return 0
+        s = self._seqs[seq_id]
+        limit = min(len(tokens), s.n_tokens,
+                    n_valid if n_valid is not None else s.n_tokens)
+        ps = self.page_size
+        parent = b""
+        added = 0
+        for b in range(limit // ps):
+            block = tuple(tokens[b * ps:(b + 1) * ps])
+            key = _chain_digest(parent, block)
+            if key not in self._index:
+                page = s.pages[b]
+                if page in self._page_key:
+                    # page already indexed under another chain (e.g. the
+                    # request itself reused it) — leave that entry alone
+                    parent = key
+                    continue
+                self._index[key] = page
+                self._page_key[page] = key
+                self._children.setdefault(parent, {})[key] = page
+                self._parent_key[key] = parent
+                self._block_tokens[key] = block
+                added += 1
+            parent = key
+        return added
+
+    def lookup_prefix(self, tokens: Sequence[int]) -> int:
+        """Tokens of ``tokens`` a prefix-aware allocation would reuse
+        (full-page matches only; does not claim anything)."""
+        if not self.enable_prefix_cache:
+            return 0
+        ps = self.page_size
+        parent = b""
+        n = 0
+        for b in range(min(len(tokens) // ps, (len(tokens) - 1) // ps)):
+            key = _chain_digest(parent, tokens[b * ps:(b + 1) * ps])
+            if key not in self._index:
+                break
+            n += ps
+            parent = key
+        return n
 
     # --------------------------- table export -------------------------- #
     def table_row(self, seq_id: int, n_pages_per_seq: int) -> np.ndarray:
@@ -181,7 +468,8 @@ class PagedKVManager:
         """Occupied pages as a tier split, fast tier filled first.
 
         Matches the ``Placement.splits`` shape so the analytical model can
-        price attention traffic with the runtime pool's actual placement."""
+        price attention traffic with the runtime pool's actual placement.
+        Shared pages count once — prefix dedup shrinks the split's mass."""
         used = self.n_used
         if not used:
             return ()

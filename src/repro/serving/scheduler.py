@@ -1,4 +1,5 @@
-"""Continuous-batching request scheduler (DESIGN.md SS10).
+"""Continuous-batching request scheduler with chunked prefill
+(DESIGN.md SS10/SS11).
 
 Iteration-level scheduling over a fixed set of batch *slots*: requests join
 the running batch the moment a slot and enough KV pages are free, and
@@ -6,11 +7,22 @@ retire individually (EOS / token budget), so short requests never wait for
 the longest member of a wave — the failure mode of the static bucketed
 engine under the paper's concurrent-inference pressure.
 
+Prefill is *chunked*: an admitted request does not monopolize the engine
+for its whole prompt. It enters a PREFILLING state and advances by
+fixed-size chunks inside the decode loop, limited by a per-step prefill
+token budget, so in-flight decodes keep emitting while a long prompt
+streams in (the prefill/decode-interference fix; LIMINAL,
+arXiv:2507.14397). Fixed chunk shapes also mean the jitted prefill
+compiles once instead of once per padded prompt length.
+
 When the page pool is exhausted mid-decode the scheduler preempts the
 most-recently admitted running request (LIFO, vLLM-style recompute
 preemption): its pages are freed and its prompt *plus the tokens it already
 emitted* are requeued as a new prefill, which makes preemption invisible in
-the final output (greedy decode is deterministic).
+the final output (greedy decode is deterministic). With the prefix cache
+enabled, a victim's full pages are registered before the free, so its
+re-admission — and any request sharing its prefix — hits the cache instead
+of recomputing.
 """
 from __future__ import annotations
 
@@ -20,7 +32,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.serving.kv_manager import PageAllocationError, PagedKVManager
 
-WAITING, RUNNING, DONE = "waiting", "running", "done"
+WAITING, PREFILLING, RUNNING, DONE = ("waiting", "prefilling", "running",
+                                      "done")
 
 
 @dataclass
@@ -32,6 +45,9 @@ class Request:
     state: str = WAITING
     n_preemptions: int = 0
     admit_order: int = -1      # monotone stamp of the LAST admission
+    n_prefilled: int = 0       # prompt tokens whose KV is cached (chunked)
+    t_submit: float = 0.0      # engine timestamps (TTFT / inter-token)
+    t_last: float = 0.0
 
     @property
     def prefill_tokens(self) -> List[int]:
@@ -44,11 +60,21 @@ class Request:
 
 
 class ContinuousScheduler:
-    """Owns the waiting queue, the slot table, and preemption policy."""
+    """Owns the waiting queue, the slot table, prefill chunking state, and
+    the preemption policy."""
 
-    def __init__(self, kv: PagedKVManager, max_batch: int):
+    def __init__(self, kv: PagedKVManager, max_batch: int, *,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None):
+        """``prefill_chunk``: tokens per prefill chunk (None: the engine
+        prefills whole prompts in one shot — legacy mode). ``prefill_budget``
+        caps prefill tokens per engine step (default: one chunk)."""
         self.kv = kv
         self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget or prefill_chunk or 0
+        if prefill_chunk and self.prefill_budget < prefill_chunk:
+            raise ValueError("prefill_budget must cover at least one chunk")
         self.waiting: Deque[Request] = deque()
         self.slots: Dict[int, Request] = {}      # slot index -> request
         self.done: List[Request] = []
@@ -66,6 +92,16 @@ class ContinuousScheduler:
     def free_slots(self) -> List[int]:
         return [i for i in range(self.max_batch) if i not in self.slots]
 
+    def prefilling(self) -> List[Tuple[int, Request]]:
+        """PREFILLING slots, FCFS by admission order."""
+        return sorted(((s, r) for s, r in self.slots.items()
+                       if r.state == PREFILLING),
+                      key=lambda sr: sr[1].admit_order)
+
+    def running(self) -> List[Tuple[int, Request]]:
+        return sorted((s, r) for s, r in self.slots.items()
+                      if r.state == RUNNING)
+
     # ------------------------------ submit ----------------------------- #
     def submit(self, req: Request) -> None:
         total = len(req.prompt) + req.max_new_tokens
@@ -75,12 +111,34 @@ class ContinuousScheduler:
                 f" but the pool only has {self.kv.n_pages - 1}")
         self.waiting.append(req)
 
+    def _should_defer(self, req: Request) -> bool:
+        """Hold a request back while an in-flight prefill is still computing
+        a prefix the request could reuse: admitting it now would recompute
+        (and re-store) pages that are about to appear in the cache."""
+        pf = req.prefill_tokens
+        ps = self.kv.page_size
+        cap = (len(pf) - 1) // ps * ps      # reusable extent (full pages)
+        avail = self.kv.lookup_prefix(pf)
+        for other in self.slots.values():
+            if other.state != PREFILLING:
+                continue
+            common = 0
+            for a, b in zip(pf, other.prefill_tokens):
+                if a != b:
+                    break
+                common += 1
+            if min(common // ps * ps, cap) > avail:
+                return True
+        return False
+
     # ------------------------------ admit ------------------------------ #
     def admit(self) -> List[Tuple[int, Request]]:
         """Admit waiting requests while a slot + pages are available.
 
-        Reserves pages for the padded prefill plus one headroom page so an
-        admission cannot immediately deadlock the next decode step."""
+        Reserves pages for the worst-case prefill extent plus one headroom
+        page so an admission cannot immediately deadlock the next decode
+        step. With the prefix cache, matched prefix pages are shared by
+        reference and ``req.n_prefilled`` starts past them."""
         admitted: List[Tuple[int, Request]] = []
         free = self.free_slots()
         while free and self.waiting:
@@ -89,43 +147,68 @@ class ContinuousScheduler:
             padded = -(-pf_len // self.kv.page_size) * self.kv.page_size
             # a solo admission may take the whole pool (``submit`` proved the
             # request fits it end-to-end); otherwise keep one headroom page
-            # so the next decode write cannot instantly deadlock
+            # so the next decode write cannot instantly deadlock. Chunk
+            # right-padding needs no extra pages: positions past the reserve
+            # spill into the null page.
             solo = not self.slots and not admitted
             if not self.kv.can_admit(padded, headroom_pages=0 if solo else 1):
                 break                      # FCFS: don't starve the head
+            if (self.kv.enable_prefix_cache and self.prefill_chunk
+                    and self._should_defer(req)):
+                break                      # its prefix is being prefilled
             self.waiting.popleft()
             slot = free.pop(0)
-            self.kv.allocate(req.rid, pf_len, reserve_tokens=padded)
-            req.state = RUNNING
+            if self.kv.enable_prefix_cache:
+                alloc = self.kv.allocate_shared(req.rid, req.prefill_tokens,
+                                                reserve_tokens=padded)
+                req.n_prefilled = alloc.n_cached
+            else:
+                self.kv.allocate(req.rid, pf_len, reserve_tokens=padded)
+                req.n_prefilled = 0
+            req.state = PREFILLING if self.prefill_chunk else RUNNING
             req.admit_order = self._admit_stamp
             self._admit_stamp += 1
             self.slots[slot] = req
             admitted.append((slot, req))
         return admitted
 
+    def finish_prefill(self, slot: int) -> None:
+        self.slots[slot].state = RUNNING
+
     # ----------------------------- retire ------------------------------ #
     def retire(self, slot: int) -> Request:
         req = self.slots.pop(slot)
         req.state = DONE
+        # leave the finished sequence's full pages in the prefix cache
+        # (refcount 0, evictable) for later shared-prefix requests
+        self.kv.register_prefix(req.rid, req.prefill_tokens,
+                                n_valid=self.kv.seq_len(req.rid))
         self.kv.free_seq(req.rid)
         self.done.append(req)
         return req
 
     # ---------------------------- preemption --------------------------- #
     def preempt_one(self, protect: Optional[int] = None) -> Optional[int]:
-        """Evict the most recently admitted running request (except the
-        ``protect`` slot); its pages return to the pool and it rejoins the
-        FRONT of the waiting queue for recompute. Returns the slot freed."""
+        """Evict the most recently admitted request (except the ``protect``
+        slot); its pages return to the pool and it rejoins the FRONT of the
+        waiting queue for recompute. Valid full pages are registered first
+        so the re-admission hits the prefix cache. Returns the slot freed."""
         candidates = [(req.admit_order, slot) for slot, req in
                       self.slots.items() if slot != protect]
         if not candidates:
             return None
         _, slot = max(candidates)
         req = self.slots.pop(slot)
+        # valid KV extent: mid-prefill it is the chunk progress; mid-decode
+        # the last accounted token's write may not have landed yet
+        n_valid = (req.n_prefilled if req.state == PREFILLING
+                   else max(self.kv.seq_len(req.rid) - 1, 0))
+        self.kv.register_prefix(req.rid, req.prefill_tokens, n_valid=n_valid)
         self.kv.free_seq(req.rid)
         req.state = WAITING
         req.n_preemptions += 1
         req.admit_order = -1
+        req.n_prefilled = 0
         self.waiting.appendleft(req)
         return slot
 
