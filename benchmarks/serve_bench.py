@@ -1,10 +1,12 @@
 """Serving smoke benchmark: continuous engine on a shared-document QA
-workload, prefix cache on vs off (DESIGN.md SS11).
+workload, prefix cache on vs off (DESIGN.md SS11) plus a fused-decode
+lookahead sweep (DESIGN.md SS12).
 
 Emits the perf trajectory the CI tracks from PR 3 on: TPS, TTFT/ITL
 percentiles, prefill tokens actually computed, jitted-prefill compile
-count (fixed chunk shapes => 1), and page dedup — the runtime counterpart
-of the paper's concurrency-driven capacity pressure.
+count (fixed chunk shapes => 1), page dedup, and — from PR 4 — host sync
+counts across decode-lookahead K in {1, 4, 8, 16}: the fused multi-step
+decode should cut host round-trips by ~K at identical outputs.
 
 Run: PYTHONPATH=src python benchmarks/serve_bench.py --json BENCH_serve.json
 """
@@ -20,12 +22,15 @@ from repro.configs.reduce import reduced
 from repro.models import RuntimeOptions, init_params
 
 
-def run_workload(eng, reqs, new_tokens: int) -> dict:
+def run_workload(eng, reqs, new_tokens: int) -> tuple:
+    """Returns (outputs of the timed pass, metrics dict) — greedy decode
+    is deterministic, so callers reuse the outputs instead of
+    re-serving."""
     eng.serve([r[:] for r in reqs], new_tokens)   # warm the jit caches
     eng.stats.__init__()
-    eng.serve([r[:] for r in reqs], new_tokens)
+    outs = eng.serve([r[:] for r in reqs], new_tokens)
     s = eng.stats
-    return {
+    return outs, {
         "tps": round(s.tps, 2),
         "ttft_p50_ms": round(s.ttft_p50 * 1e3, 3),
         "ttft_p95_ms": round(s.ttft_p95 * 1e3, 3),
@@ -37,8 +42,10 @@ def run_workload(eng, reqs, new_tokens: int) -> dict:
         "cow_copies": s.cow_copies,
         "peak_pages_used": s.peak_pages_used,
         "prefill_recompiles": s.prefill_compiles,
+        "decode_compiles": s.decode_compiles,
         "preemptions": s.preemptions,
         "decode_steps": s.decode_steps,
+        "host_syncs": s.host_syncs,
     }
 
 
@@ -53,6 +60,9 @@ def main() -> None:
     ap.add_argument("--doc-len", type=int, default=48)
     ap.add_argument("--n-requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--lookahead", default="1,4,8,16",
+                    help="comma-separated decode-lookahead K values to "
+                         "sweep (fused multi-step decode)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch), d_model=128, n_layers=4, vocab=512)
@@ -73,8 +83,7 @@ def main() -> None:
         eng = ServeEngine(cfg, params, opts, max_len=max_len,
                           scheduler="continuous", page_size=16, max_batch=8,
                           prefix_cache=pc)
-        results[key] = run_workload(eng, reqs, args.new_tokens)
-        outs[pc] = eng.serve([r[:] for r in reqs], args.new_tokens)
+        outs[pc], results[key] = run_workload(eng, reqs, args.new_tokens)
 
     base, shared = results["baseline_no_sharing"], results["prefix_sharing"]
     results["derived"] = {
@@ -85,6 +94,37 @@ def main() -> None:
         "peak_pages_ratio": round(
             shared["peak_pages_used"] / max(base["peak_pages_used"], 1), 3),
     }
+
+    # ---- fused-decode lookahead sweep (DESIGN.md SS12) ---- #
+    # decode-bound variant of the workload: distinct prompts (no shared-
+    # prefix deferral staggering the joins) and a prefill budget covering
+    # every pending chunk, so all requests decode in lock-step and the
+    # sweep isolates the per-token host round-trip the fused path removes.
+    ks = [int(k) for k in args.lookahead.split(",") if k]
+    d_reqs = [rng.integers(1, cfg.vocab, size=args.doc_len + 8).tolist()
+              for _ in range(args.n_requests)]
+    budget = args.n_requests * (args.doc_len + 8 + 32)
+    sweep, k_outs = {}, {}
+    for k in ks:
+        eng = ServeEngine(cfg, params, opts, max_len=max_len,
+                          scheduler="continuous", page_size=16, max_batch=8,
+                          prefix_cache=True, decode_lookahead=k,
+                          prefill_budget=budget)
+        k_outs[k], sweep[str(k)] = run_workload(eng, d_reqs,
+                                                args.new_tokens)
+    results["lookahead_sweep"] = sweep
+    if 1 in ks and 8 in ks:
+        k1, k8 = sweep["1"], sweep["8"]
+        results["derived"]["lookahead"] = {
+            "outputs_token_identical_across_k": all(
+                k_outs[k] == k_outs[ks[0]] for k in ks),
+            "host_syncs_k1": k1["host_syncs"],
+            "host_syncs_k8": k8["host_syncs"],
+            "host_sync_reduction_k8_over_k1": round(
+                1 - k8["host_syncs"] / max(k1["host_syncs"], 1), 3),
+            "tps_speedup_k8_over_k1": round(k8["tps"] / max(k1["tps"],
+                                                            1e-9), 3),
+        }
 
     print(json.dumps(results, indent=2))
     if args.json:

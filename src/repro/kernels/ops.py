@@ -1,7 +1,11 @@
 """Jit'd public wrappers for the Pallas kernels with XLA fallbacks.
 
 ``try_*`` functions return ``None`` when the kernel is not eligible for the
-given shapes/backend so callers can fall back to the XLA path.
+given shapes/backend so callers can fall back to the XLA path. Eligibility
+is decided from static shapes/dtypes only, never from traced values, so
+the wrappers are safe to call inside ``jax.lax.scan`` bodies — the fused
+multi-step decode (DESIGN.md SS12) traces them once per scan, and every
+micro-step routes to the same kernel.
 """
 from __future__ import annotations
 
@@ -22,6 +26,13 @@ def _pallas_ok() -> bool:
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _page_tile_ok(page_size: int, kv_dtype) -> bool:
+    """A (page_size, dh) KV tile must meet the dtype's minimum sublane
+    count (shared eligibility rule for every paged kernel)."""
+    min_sublane = {1: 32, 2: 16}.get(jnp.dtype(kv_dtype).itemsize, 8)
+    return page_size % min_sublane == 0
 
 
 def try_flash_attention(q, k, v, *, mask_kind: str, window: int = 0,
@@ -71,9 +82,7 @@ def try_paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens, *,
     page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
     if dh % 128 != 0 and dh not in (64, 128, 256):
         return None
-    # a (page_size, dh) KV tile must meet the dtype's minimum sublane count
-    min_sublane = {1: 32, 2: 16}.get(jnp.dtype(k_pages.dtype).itemsize, 8)
-    if page_size % min_sublane != 0:
+    if not _page_tile_ok(page_size, k_pages.dtype):
         return None
     if H % Hkv != 0:
         return None
@@ -93,8 +102,7 @@ def try_chunk_prefill_attention(q, k_pages, v_pages, page_table, start,
     page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
     if dh % 128 != 0 and dh not in (64, 128, 256):
         return None
-    min_sublane = {1: 32, 2: 16}.get(jnp.dtype(k_pages.dtype).itemsize, 8)
-    if page_size % min_sublane != 0:
+    if not _page_tile_ok(page_size, k_pages.dtype):
         return None
     if H % Hkv != 0:
         return None

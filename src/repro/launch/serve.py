@@ -49,6 +49,13 @@ def main() -> None:
                     help="max prefill tokens per engine step")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix KV page reuse")
+    ap.add_argument("--decode-lookahead", type=int, default=8,
+                    help="fused decode block size K: sample greedily on "
+                         "device and sync with the host once per K tokens "
+                         "instead of once per token; KV pages for the K "
+                         "writes are reserved ahead (all-or-nothing). K=1 "
+                         "reproduces the per-token loop exactly; any K is "
+                         "token-identical (default: 8)")
     ap.add_argument("--shared-doc", type=int, default=0,
                     help="prepend a shared document of this many tokens to "
                          "every request (exercises prefix dedup)")
@@ -64,7 +71,8 @@ def main() -> None:
                       max_batch=args.max_batch,
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget,
-                      prefix_cache=not args.no_prefix_cache)
+                      prefix_cache=not args.no_prefix_cache,
+                      decode_lookahead=args.decode_lookahead)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
@@ -89,7 +97,8 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} sched={args.scheduler} "
           f"kv={args.kv_policy} reqs={s.requests} "
           f"prefill={s.prefill_s*1e3:.0f}ms decode={s.decode_s*1e3:.0f}ms "
-          f"steps={s.decode_steps} preempt={s.preemptions} TPS={s.tps:.1f}")
+          f"steps={s.decode_steps} lookahead={args.decode_lookahead} "
+          f"syncs={s.host_syncs} preempt={s.preemptions} TPS={s.tps:.1f}")
     if args.scheduler == "continuous":
         print(f"[serve] prefill_toks={s.prefill_tokens_computed} "
               f"cached={s.cached_prefix_tokens} deduped={s.pages_deduped} "

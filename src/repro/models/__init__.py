@@ -1,13 +1,14 @@
 """Pure-JAX model zoo: dense/GQA, MLA, MoE, SSM (SSD), hybrid, enc-dec, VLM."""
 from repro.models.api import (RuntimeOptions, SHAPES, ShapeSpec,
                               cell_runnable, copy_pages, decode_step,
-                              decode_step_paged, forward, init_cache,
+                              decode_step_paged, decode_steps,
+                              decode_steps_paged, forward, init_cache,
                               init_paged_cache, init_params, input_specs,
                               module_for, paged_supported, prefill,
                               prefill_paged, prefill_paged_chunk, train_loss)
 
 __all__ = ["RuntimeOptions", "SHAPES", "ShapeSpec", "cell_runnable",
-           "copy_pages", "decode_step", "decode_step_paged", "forward",
-           "init_cache", "init_paged_cache", "init_params", "input_specs",
-           "module_for", "paged_supported", "prefill", "prefill_paged",
-           "prefill_paged_chunk", "train_loss"]
+           "copy_pages", "decode_step", "decode_step_paged", "decode_steps",
+           "decode_steps_paged", "forward", "init_cache", "init_paged_cache",
+           "init_params", "input_specs", "module_for", "paged_supported",
+           "prefill", "prefill_paged", "prefill_paged_chunk", "train_loss"]

@@ -53,6 +53,30 @@ def decode_step(cfg, params, token, pos, cache, opts=RuntimeOptions()):
     return module_for(cfg).decode_step(cfg, params, token, pos, cache, opts)
 
 
+def decode_steps(cfg, params, token, pos, cache, n_steps: int,
+                 opts=RuntimeOptions(), *, temperature: float = 0.0):
+    """Fused K-step greedy decode over the dense cache (DESIGN.md SS12).
+
+    Scans ``module_for(cfg).decode_step`` ``n_steps`` times with on-device
+    argmax between steps, so the host syncs once per (B, n_steps) token
+    block instead of once per token. Family-generic: any ``decode_step``
+    with a shape-stable cache pytree scans. token: (B,) int32 last sampled
+    token; pos: scalar int32 write position of that token's KV. Returns
+    ((B, n_steps) token block, new cache)."""
+    from repro.models.lm import sample_greedy
+    mod = module_for(cfg)
+
+    def micro_step(carry, _):
+        tok, p, c = carry
+        logits, c = mod.decode_step(cfg, params, tok, p, c, opts)
+        nxt = sample_greedy(logits, temperature)
+        return (nxt, p + 1, c), nxt
+
+    init = (jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32), cache)
+    (_, _, cache), toks = jax.lax.scan(micro_step, init, None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), cache
+
+
 # ------------------------- paged KV (continuous batching) -------------- #
 # Only the decoder-only GQA families page their KV; other families report
 # a reason via paged_supported (DESIGN.md SS10).
@@ -79,6 +103,16 @@ def decode_step_paged(cfg, params, token, seq_lens, page_table, cache,
                       opts=RuntimeOptions()):
     return module_for(cfg).decode_step_paged(cfg, params, token, seq_lens,
                                              page_table, cache, opts)
+
+
+def decode_steps_paged(cfg, params, tokens, seq_lens, page_table, cache,
+                       n_steps, opts=RuntimeOptions(), *, eos_id=None,
+                       pad_id: int = 0, temperature: float = 0.0,
+                       done=None, quota=None):
+    return module_for(cfg).decode_steps_paged(
+        cfg, params, tokens, seq_lens, page_table, cache, n_steps, opts,
+        eos_id=eos_id, pad_id=pad_id, temperature=temperature, done=done,
+        quota=quota)
 
 
 def prefill_paged_chunk(cfg, params, tokens, cache, page_table, start,

@@ -764,3 +764,76 @@ def decode_step_paged(cfg: ArchConfig, params, token, seq_lens, page_table,
     x, new_stack = jax.lax.scan(scan_body, x, (params["stack"], cache["stack"]))
     logits = _logits(cfg, params, x)[:, 0]
     return logits, {"stack": new_stack}
+
+
+# ------------------------ fused multi-step decode ---------------------- #
+# DESIGN.md SS12: the decode hot loop pays one host round-trip per token
+# when sampling happens on the host. The fused path scans K micro-steps on
+# device — sample (greedy argmax), write KV, advance lengths, latch an EOS/
+# budget done-mask — and hands the host a (B, K) token block per sync.
+
+
+def sample_greedy(logits, temperature: float = 0.0):
+    """On-device token choice. Greedy argmax matches ``np.argmax`` exactly
+    (both take the first maximum), which is what keeps the fused path
+    token-identical to the host-sampled loop. ``temperature`` is plumbed
+    for a later stochastic path; only 0.0 (greedy) is implemented."""
+    if temperature != 0.0:
+        raise NotImplementedError(
+            "fused decode currently samples greedily; temperature sampling "
+            "needs a per-step PRNG key threaded through the scan")
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def decode_steps_paged(cfg: ArchConfig, params, tokens, seq_lens, page_table,
+                       cache, n_steps: int,
+                       opts: RuntimeOptions = RuntimeOptions(), *,
+                       eos_id: Optional[int] = None, pad_id: int = 0,
+                       temperature: float = 0.0, done=None, quota=None):
+    """Fused K-step greedy decode over the paged pool (DESIGN.md SS12).
+
+    ``jax.lax.scan`` over ``n_steps`` micro-steps: each step writes the
+    carried token's KV at its slot's current length, attends, samples the
+    next token on device, and advances per-slot lengths — no host sync
+    until the whole (B, n_steps) block is pulled. Every KV position the
+    scan writes must be page-backed up front (``PagedKVManager.
+    reserve_ahead``): the scan cannot allocate.
+
+    tokens: (B,) last sampled token per slot (its KV is written by the
+    first micro-step); seq_lens: (B,) tokens whose KV already landed;
+    done: (B,) bool slots that start inactive (their page-table rows are
+    masked to the null page, they emit ``pad_id``); quota: (B,) int32 max
+    tokens each slot may emit this block (default ``n_steps``) — the
+    device-side mirror of each request's remaining budget. A slot latches
+    done after emitting EOS (``eos_id``) or exhausting its quota; latched
+    slots stop advancing lengths and their writes land on the null page.
+
+    With ``n_steps=1`` this is exactly ``decode_step_paged`` + host argmax
+    (the K=1 engine equivalence guarantee). Returns ((B, n_steps) int32
+    token block, new cache)."""
+    B = tokens.shape[0]
+    if done is None:
+        done = jnp.zeros((B,), bool)
+    if quota is None:
+        quota = jnp.full((B,), n_steps, jnp.int32)
+    quota = jnp.asarray(quota, jnp.int32)
+
+    def micro_step(carry, _):
+        tok, lens, dn, n_emit, c = carry
+        # latched slots write into (and read from) the null page only
+        pt = jnp.where(dn[:, None], 0, page_table)
+        logits, c = decode_step_paged(cfg, params, tok, lens, pt, c, opts)
+        nxt = jnp.where(dn, jnp.int32(pad_id),
+                        sample_greedy(logits, temperature))
+        n_emit = n_emit + jnp.where(dn, 0, 1)
+        new_dn = dn | (n_emit >= quota)
+        if eos_id is not None:
+            new_dn = new_dn | (~dn & (nxt == eos_id))
+        lens = jnp.where(dn, lens, lens + 1)   # this step's write landed
+        return (nxt, lens, new_dn, n_emit, c), nxt
+
+    init = (jnp.asarray(tokens, jnp.int32), jnp.asarray(seq_lens, jnp.int32),
+            done, jnp.zeros((B,), jnp.int32), cache)
+    (_, _, _, _, cache), toks = jax.lax.scan(micro_step, init, None,
+                                             length=n_steps)
+    return jnp.moveaxis(toks, 0, 1), cache

@@ -35,12 +35,28 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import (RuntimeOptions, copy_pages, decode_step,
-                          decode_step_paged, init_cache, init_paged_cache,
-                          init_params, paged_supported, prefill,
-                          prefill_paged, prefill_paged_chunk)
+                          decode_steps, decode_steps_paged, init_cache,
+                          init_paged_cache, init_params, paged_supported,
+                          prefill, prefill_paged_chunk)
 from repro.serving.kv_manager import PagedKVManager, TierBudget
 from repro.serving.scheduler import (PREFILLING, RUNNING, ContinuousScheduler,
                                      Request)
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_pow2(items: List, pad_item) -> List:
+    """Pad a work list to the next power-of-two length with inert filler so
+    jitted consumers see O(log n) distinct shapes instead of one compile
+    per batch size (used for COW copy batches; fused decode blocks clamp
+    their step count through the same ``_next_pow2`` rounding)."""
+    return list(items) + [pad_item] * (_next_pow2(len(items)) - len(items))
 
 
 @dataclass
@@ -58,6 +74,9 @@ class ServeStats:
     cow_copies: int = 0
     peak_pages_used: int = 0            # max distinct in-use pages
     prefill_compiles: int = 0           # distinct jitted prefill shapes
+    # fused multi-step decode observability (DESIGN.md SS12)
+    host_syncs: int = 0                 # device->host round-trips taken
+    decode_compiles: int = 0            # distinct jitted decode shapes
     # per-request latency samples (seconds)
     ttft: List[float] = field(default_factory=list)
     itl: List[float] = field(default_factory=list)
@@ -97,7 +116,7 @@ class ServeEngine:
                  max_batch: int = 8, n_pages: Optional[int] = None,
                  hierarchy=None, prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, decode_lookahead: int = 8):
         if kv_policy == "int8":
             import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
@@ -115,11 +134,19 @@ class ServeEngine:
         self.scheduler = scheduler
         self.page_size = page_size
         self.max_batch = max_batch
+        if decode_lookahead < 1:
+            raise ValueError(f"decode_lookahead ({decode_lookahead}) must "
+                             f"be >= 1")
+        self.decode_lookahead = decode_lookahead
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed), opts)
         self._prefill = jax.jit(partial(prefill, cfg, opts=opts))
         self._decode = jax.jit(partial(decode_step, cfg, opts=opts),
                                donate_argnums=(3,))
+        # fused K-step greedy decode over the dense cache (static engine)
+        self._decode_block = jax.jit(partial(decode_steps, cfg, opts=opts),
+                                     static_argnames=("n_steps",),
+                                     donate_argnums=(3,))
         # paged path (continuous scheduler); chunk right-padding needs no
         # reserve headroom — positions past a prompt's pages spill into the
         # reserved null page
@@ -140,24 +167,32 @@ class ServeEngine:
         # requested pool size; PagedKVManager clamps it to the tier budget
         self.n_pages = (n_pages if n_pages is not None
                         else max_batch * self.n_pages_per_seq + 1)
-        self._prefill_paged = jax.jit(
-            partial(prefill_paged, cfg, opts=opts),
-            static_argnames=("calibrate",), donate_argnums=(2,))
         self._prefill_chunk = jax.jit(
             partial(prefill_paged_chunk, cfg, opts=opts),
             static_argnames=("calibrate",), donate_argnums=(2,))
-        self._decode_paged = jax.jit(
-            partial(decode_step_paged, cfg, opts=opts), donate_argnums=(4,))
+        # fused K-step decode over the paged pool: sample + EOS-latch on
+        # device, one host sync per (B, K) token block (DESIGN.md SS12)
+        self._decode_fused = jax.jit(
+            partial(decode_steps_paged, cfg, opts=opts, eos_id=eos_id),
+            static_argnames=("n_steps",), donate_argnums=(4,))
         self._copy_pages = jax.jit(partial(copy_pages, cfg),
                                    donate_argnums=(0,))
         self._chunk_shapes: set = set()   # distinct jitted prefill shapes
+        self._decode_shapes: set = set()  # distinct jitted decode shapes
         self.kv_manager: Optional[PagedKVManager] = None  # set per serve()
         self.stats = ServeStats()
 
     # ------------------------------------------------------------------ #
     def generate(self, prompts, max_new_tokens: int, *, prefix_emb=None,
                  greedy: bool = True, seed: int = 0) -> List[List[int]]:
-        """prompts: (B, S) int array (equal lengths per wave)."""
+        """prompts: (B, S) int array (equal lengths per wave).
+
+        Greedy decode runs through the fused K-step path (DESIGN.md SS12):
+        the host pulls one (B, K) token block per sync instead of one
+        token, with K = ``decode_lookahead``. Emitted columns are identical
+        for every K — blocks may overrun the EOS stopping point on device,
+        but the host truncates at exactly the step the per-token loop
+        would have stopped at."""
         prompts = jnp.asarray(prompts, jnp.int32)
         B, S = prompts.shape
         pfx = prefix_emb.shape[1] if prefix_emb is not None else 0
@@ -165,38 +200,75 @@ class ServeEngine:
         assert total <= self.max_len, (
             f"prompt({S}) + prefix({pfx}) + new({max_new_tokens}) = {total} "
             f"exceeds max_len={self.max_len}")
-        cache = init_cache(self.cfg, B, total, self.opts)
+        K = self.decode_lookahead if greedy else 1
+        n_blocks = -(-max(max_new_tokens - 1, 0) // K)
+        # the last fused block may overrun the token budget; headroom keeps
+        # its (discarded) writes in-bounds instead of clamp-corrupting
+        cache = init_cache(self.cfg, B, S + pfx + 1 + n_blocks * K,
+                           self.opts)
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, prompts, cache,
                                       prefix_emb=prefix_emb)
         logits.block_until_ready()
+        self.stats.host_syncs += 1
         self.stats.prefill_s += time.perf_counter() - t0
 
-        out = []
+        out: List[np.ndarray] = []
         done = np.zeros((B,), bool)
-        key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
-        tok = None
-        for i in range(max_new_tokens):
-            if greedy:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
+        launched = 0                        # device decode micro-steps
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pending = tok[:, None]          # device columns not yet pulled
+            n_sent = 1                      # tokens produced on device
+            stop = False
+            while True:
+                cols = np.asarray(pending)
+                self.stats.host_syncs += 1
+                for j in range(cols.shape[1]):
+                    if len(out) >= max_new_tokens:
+                        break
+                    out.append(cols[:, j])
+                    if self.eos_id is not None:
+                        done |= cols[:, j] == self.eos_id
+                        if done.all():
+                            stop = True
+                            break
+                if stop or len(out) >= max_new_tokens:
+                    break
+                # tail blocks run short (power-of-two clamp, O(log K)
+                # compiled shapes) instead of overrunning the budget
+                k_eff = min(K, _next_pow2(max_new_tokens - len(out)))
+                self._decode_shapes.add(("dense", B, k_eff))
+                pending, cache = self._decode_block(
+                    self.params, tok, jnp.int32(S + pfx + n_sent - 1),
+                    cache, n_steps=k_eff)
+                tok = pending[:, -1]
+                n_sent += k_eff
+                launched += k_eff
+        else:
+            key = jax.random.PRNGKey(seed)
+            for i in range(max_new_tokens):
                 key, sub = jax.random.split(key)
                 tok = jax.random.categorical(sub, logits).astype(jnp.int32)
-            out.append(np.asarray(tok))
-            if self.eos_id is not None:
-                done |= np.asarray(tok) == self.eos_id
-                if done.all():
-                    break
-            if i + 1 < max_new_tokens:
-                logits, cache = self._decode(self.params, tok,
-                                             jnp.int32(S + pfx + i), cache)
-        jax.block_until_ready(tok)
+                out.append(np.asarray(tok))
+                self.stats.host_syncs += 1
+                if self.eos_id is not None:
+                    done |= out[-1] == self.eos_id
+                    if done.all():
+                        break
+                if i + 1 < max_new_tokens:
+                    logits, cache = self._decode(
+                        self.params, tok, jnp.int32(S + pfx + i), cache)
+                    launched += 1
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.new_tokens += len(out) * B
         self.stats.requests += B
-        self.stats.decode_steps += max(len(out) - 1, 0)  # prefill made tok 0
+        # launched device micro-steps (may exceed emitted-1: blocks can
+        # overrun EOS) — the same semantics as the continuous engine
+        self.stats.decode_steps += launched
+        self.stats.decode_compiles = len(self._decode_shapes)
         seqs = np.stack(out, axis=1)
         return [row.tolist() for row in seqs]
 
@@ -230,7 +302,9 @@ class ServeEngine:
 
         Admissions do not monopolize the loop: each step spends at most
         ``prefill_budget`` tokens advancing PREFILLING slots by fixed-size
-        chunks, then runs one ragged decode step over the RUNNING slots.
+        chunks, then runs one fused ``decode_lookahead``-step decode block
+        over the RUNNING slots (on-device sampling + EOS latch, KV pages
+        reserved ahead all-or-nothing, one host sync per block; SS12).
         Prompts sharing an already-seen prefix skip both the recompute and
         the pages (refcounted reuse; COW on mid-page divergence)."""
         ps, n_pp = self.page_size, self.n_pages_per_seq
@@ -260,8 +334,10 @@ class ServeEngine:
             return (req.remaining <= 0
                     or (self.eos_id is not None and tok == self.eos_id))
 
-        def emit(req: Request, tok: int) -> None:
-            t = now()
+        def emit(req: Request, tok: int, at: Optional[float] = None) -> None:
+            # ``at``: attributed emission time — fused decode blocks spread
+            # the block's wall time evenly over the tokens it produced
+            t = now() if at is None else at
             if not req.out:                      # very first token: TTFT
                 self.stats.ttft.append(t - req.t_submit)
             elif req.t_last:
@@ -277,10 +353,7 @@ class ServeEngine:
                 # pad to a power-of-two batch with null-page self-copies so
                 # the jitted scatter sees O(log) distinct shapes, not one
                 # compile per COW-batch size
-                n = 1
-                while n < len(pairs):
-                    n *= 2
-                pairs = pairs + [(0, 0)] * (n - len(pairs))
+                pairs = _pad_pow2(pairs, (0, 0))
                 cache = self._copy_pages(cache,
                                          jnp.asarray(pairs, jnp.int32))
 
@@ -309,6 +382,7 @@ class ServeEngine:
                         jnp.asarray([start + n_real], jnp.int32),
                         calibrate=not calibrated)
                     logits.block_until_ready()
+                    self.stats.host_syncs += 1
                     calibrated = True
                     self.stats.prefill_s += now() - t0
                     self.stats.prefill_tokens_computed += n_real
@@ -334,48 +408,75 @@ class ServeEngine:
                     continue     # prefills advance / admissions retry
                 break
 
-            # ---- account the pending token's KV write (may preempt) ---- #
-            # LIFO preemption may evict ANY slot, including a just-admitted
-            # PREFILLING one — diff the full slot table, not just RUNNING
+            # ---- reserve the block's KV writes up front (may preempt) --- #
+            # K lookahead writes per slot, all-or-nothing; LIFO preemption
+            # may evict ANY slot, including a just-admitted PREFILLING one —
+            # diff the full slot table, not just RUNNING
+            K = self.decode_lookahead
             before = set(sched.slots)
-            for slot, _ in running:
+            for slot, req in running:
                 if slot in sched.slots:     # may have been preempted
-                    sched.grow_seq(slot)
+                    sched.reserve_lookahead(slot, min(K, req.remaining))
             self.stats.preemptions += sum(
                 1 for s in before if s not in sched.slots)
             running = [(s, r) for s, r in running
                        if s in sched.slots and r.state == RUNNING]
-            apply_copies()
+            apply_copies()   # COW from reservations lands before the scan
             self.stats.peak_pages_used = max(self.stats.peak_pages_used,
                                              kv.n_used)
 
-            # ---- one ragged decode step over the RUNNING slots ---- #
+            # ---- one fused K-step decode block over the RUNNING slots --- #
+            # sampling, EOS latching, and length advance happen on device;
+            # the host syncs once per (B, K) token block (DESIGN.md SS12)
             tokens = np.zeros((B,), np.int32)
             seq_lens = np.zeros((B,), np.int32)
             tables = np.zeros((B, n_pp), np.int32)
+            quota = np.zeros((B,), np.int32)
+            inactive = np.ones((B,), bool)
             for slot, req in running:
                 tokens[slot] = req.out[-1]
-                seq_lens[slot] = kv.seq_len(req.rid) - 1  # write position
+                seq_lens[slot] = kv.seq_len(req.rid)      # write position
                 tables[slot] = kv.table_row(req.rid, n_pp)
+                quota[slot] = min(K, req.remaining)
+                inactive[slot] = False
+            # clamp the block to the largest live quota, rounded up to a
+            # power of two: a tail block (everyone nearly done) runs short
+            # instead of decoding K wasted pad steps, at O(log K) shapes
+            n_steps = min(K, _next_pow2(int(quota.max())))
+            self._decode_shapes.add(("paged", B, n_steps))
             t0 = now()
-            logits, cache = self._decode_paged(
+            blk, cache = self._decode_fused(
                 self.params, jnp.asarray(tokens), jnp.asarray(seq_lens),
-                jnp.asarray(tables), cache)
-            logits_np = np.asarray(logits)
-            self.stats.decode_s += now() - t0
-            self.stats.decode_steps += 1
+                jnp.asarray(tables), cache, n_steps=n_steps,
+                done=jnp.asarray(inactive), quota=jnp.asarray(quota))
+            blk_np = np.asarray(blk)
+            dt = now() - t0
+            self.stats.host_syncs += 1
+            self.stats.decode_s += dt
+            self.stats.decode_steps += n_steps
 
+            # distribute the block: per-token ITL is attributed evenly from
+            # the block wall time; retire/commit happen at block boundaries
             for slot, req in running:
-                tok = int(np.argmax(logits_np[slot]))
-                emit(req, tok)
-                if finished(req, tok):
-                    sched.retire(slot)
+                fin = False
+                n_written = 0                # device-side KV writes taken
+                for j in range(int(quota[slot])):
+                    tok = int(blk_np[slot, j])
+                    n_written += 1
+                    emit(req, tok, at=t0 + dt * (j + 1) / n_steps)
+                    if finished(req, tok):
+                        fin = True
+                        break
+                kv.commit_tokens(req.rid, n_written)
+                if fin:
+                    sched.retire(slot)       # frees surplus reserved pages
 
         self.stats.requests += len(requests)
         self.stats.cached_prefix_tokens += kv.dedup_tokens
         self.stats.pages_deduped += kv.dedup_hits
         self.stats.cow_copies += kv.cow_copies
         self.stats.prefill_compiles = len(self._chunk_shapes)
+        self.stats.decode_compiles = len(self._decode_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"
         assert kv.n_used == 0, "page leak: retired sequences kept pages"
         by_rid = {req.rid: req.out for req in sched.done}

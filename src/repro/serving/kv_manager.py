@@ -371,6 +371,80 @@ class PagedKVManager:
             self._unregister_page(page)
         return None
 
+    # ------------------------ lookahead reservation --------------------- #
+    def reserve_ahead(self, seq_id: int, k: int) -> List[int]:
+        """All-or-nothing reservation for the next ``k`` token writes
+        (DESIGN.md SS12): after this returns, positions ``[n_tokens,
+        n_tokens + k)`` are page-backed and privately writable, so a fused
+        K-step decode can scatter KV without host intervention. Claims
+        fresh pages past the sequence's current extent, copies-on-write any
+        shared page inside the write window (the copies land in
+        ``drain_copies``), and unregisters exclusively-owned cached pages
+        there (their content is about to diverge from their hash).
+
+        Does NOT advance ``n_tokens`` — the host commits the block's actual
+        write count afterwards (``commit_tokens``); a preempted or retired
+        sequence releases everything via ``free_seq``. Raises on exhaustion
+        with nothing claimed (the scheduler preempts and retries). Returns
+        the newly claimed page ids (fresh + COW copies)."""
+        s = self._seqs[seq_id]
+        if k <= 0:
+            return []
+        ps = self.page_size
+        need_total = self.pages_needed(s.n_tokens + k)
+        first = s.n_tokens // ps
+        window_have = range(first, min(len(s.pages), need_total))
+        cow_idx = [i for i in window_have
+                   if self._ref.get(s.pages[i], 0) > 1]
+        n_fresh = max(need_total - len(s.pages), 0)
+        if n_fresh + len(cow_idx) > self.n_allocatable:
+            raise PageAllocationError(
+                f"lookahead({k}) for seq {seq_id} needs "
+                f"{n_fresh + len(cow_idx)} pages, only "
+                f"{self.n_allocatable} allocatable")
+        claimed: List[int] = []
+        for i in cow_idx:
+            src = s.pages[i]
+            dst = self._take_page()
+            self._incref(dst)
+            self._decref(src)
+            s.pages[i] = dst
+            self._pending_copies.append((src, dst))
+            self.cow_copies += 1
+            claimed.append(dst)
+        for i in window_have:         # now-private pages must leave the index
+            if s.pages[i] in self._page_key:
+                self._unregister_page(s.pages[i])
+        for _ in range(n_fresh):
+            p = self._take_page()
+            self._incref(p)
+            s.pages.append(p)
+            claimed.append(p)
+        return claimed
+
+    def commit_tokens(self, seq_id: int, n: int) -> None:
+        """Advance the landed-KV length by ``n`` after a fused decode block
+        wrote ``n`` tokens into previously reserved pages."""
+        s = self._seqs[seq_id]
+        if self.pages_needed(s.n_tokens + n) > len(s.pages):
+            raise ValueError(
+                f"commit of {n} tokens for seq {seq_id} exceeds its "
+                f"reserved pages (reserve_ahead first)")
+        s.n_tokens += n
+
+    def release_reserved(self, seq_id: int) -> int:
+        """Return reserved-but-unwritten pages (past the landed extent) to
+        the pool; the inverse of ``reserve_ahead`` for a sequence that
+        stays resident. Preemption/retirement need no explicit release —
+        ``free_seq`` drops reserved pages with the rest."""
+        s = self._seqs[seq_id]
+        keep = self.pages_needed(s.n_tokens)
+        n = 0
+        while len(s.pages) > keep:
+            self._decref(s.pages.pop())
+            n += 1
+        return n
+
     def append_token(self, seq_id: int) -> Optional[int]:
         """Extend a sequence by one token; returns the newly claimed page id
         when a page boundary is crossed, else None. Writes into a shared
@@ -395,6 +469,15 @@ class PagedKVManager:
         only matchable through its prefix, so head pages are the valuable
         ones."""
         s = self._seqs.pop(seq_id)
+        if self._pending_copies:
+            # purge queued COW copies targeting this sequence's pages: the
+            # dst was private to it, and once released it may be re-claimed
+            # and re-targeted before the engine drains — duplicate dst
+            # entries in one copy_pages batch scatter in undefined order
+            released = set(s.pages)
+            self._pending_copies = [(src, dst) for src, dst
+                                    in self._pending_copies
+                                    if dst not in released]
         for p in reversed(s.pages):
             self._decref(p)
         return len(s.pages)

@@ -200,9 +200,12 @@ class ContinuousScheduler:
         _, slot = max(candidates)
         req = self.slots.pop(slot)
         # valid KV extent: mid-prefill it is the chunk progress; mid-decode
-        # the last accounted token's write may not have landed yet
+        # every token but the last emitted one has its KV landed (the last
+        # one's write happens in the next decode block). register_prefix
+        # additionally caps this by the manager's landed length, which
+        # covers the legacy grow-then-write accounting too.
         n_valid = (req.n_prefilled if req.state == PREFILLING
-                   else max(self.kv.seq_len(req.rid) - 1, 0))
+                   else max(len(req.prefill_tokens) - 1, 0))
         self.kv.register_prefix(req.rid, req.prefill_tokens, n_valid=n_valid)
         self.kv.free_seq(req.rid)
         req.state = WAITING
@@ -219,6 +222,21 @@ class ContinuousScheduler:
         while True:
             try:
                 self.kv.append_token(req.rid)
+                return
+            except PageAllocationError:
+                if self.preempt_one(protect=slot) is None:
+                    raise
+
+    def reserve_lookahead(self, slot: int, k: int) -> None:
+        """Reserve ``k`` decode KV writes for ``slot`` before a fused
+        decode block (DESIGN.md SS12), preempting others (LIFO) until the
+        all-or-nothing reservation fits. A solo request always fits: its
+        lookahead window never extends past the prompt+budget extent that
+        ``submit`` proved the pool holds."""
+        req = self.slots[slot]
+        while True:
+            try:
+                self.kv.reserve_ahead(req.rid, k)
                 return
             except PageAllocationError:
                 if self.preempt_one(protect=slot) is None:

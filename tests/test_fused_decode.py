@@ -1,0 +1,364 @@
+"""Fused multi-step decode (DESIGN.md SS12): on-device sampling, EOS/quota
+latching, lookahead page reservation, and the K=1 equivalence guarantee.
+
+Covers the model-level fused scan vs the per-step loop (f32 + int8), the
+manager's all-or-nothing ``reserve_ahead`` / ``commit_tokens`` /
+``release_reserved`` protocol, preemption during a reserved lookahead
+window, and engine-level token-identity plus the host-sync bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.models import (RuntimeOptions, decode_step_paged,
+                          decode_steps_paged, init_paged_cache, init_params,
+                          prefill_paged)
+from repro.serving import (ContinuousScheduler, PageAllocationError,
+                           PagedKVManager, Request, ServeEngine)
+from repro.serving.engine import _pad_pow2
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2,
+                  vocab=128)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    return cfg, opts, params
+
+
+# ----------------------- model-level equivalence ------------------------ #
+
+def _paged_setup(cfg, params, opts, *, K=6, ps=4, seed=3):
+    """Prefill two ragged prompts into a paged pool with room for K steps.
+
+    Returns (cache, tok0, seq_lens, full page_table)."""
+    B, S = 2, 8
+    rng = np.random.default_rng(seed)
+    true_len = np.asarray([8, 6], np.int32)
+    toks = np.zeros((B, S), np.int32)
+    for b in range(B):
+        toks[b, :true_len[b]] = rng.integers(1, cfg.vocab, size=true_len[b])
+    npp = (S + K + ps - 1) // ps
+    n_pages = B * npp + 1
+    pt_full = np.arange(1, B * npp + 1, dtype=np.int32).reshape(B, npp)
+    cache = init_paged_cache(cfg, n_pages, ps, opts)
+    logits, cache = prefill_paged(cfg, params, jnp.asarray(toks), cache,
+                                  jnp.asarray(pt_full[:, :S // ps]),
+                                  jnp.asarray(true_len), opts,
+                                  calibrate=opts.cache_dtype == "int8")
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return cache, tok0, jnp.asarray(true_len), jnp.asarray(pt_full)
+
+
+def _per_step_loop(cfg, params, opts, cache, tok, lens, pt, K):
+    """The pre-SS12 host loop: decode_step_paged + host argmax per token."""
+    cols = []
+    for _ in range(K):
+        logits, cache = decode_step_paged(cfg, params, tok, lens, pt, cache,
+                                          opts)
+        tok = jnp.asarray(np.argmax(np.asarray(logits), axis=-1), jnp.int32)
+        cols.append(np.asarray(tok))
+        lens = lens + 1
+    return np.stack(cols, axis=1)
+
+
+@pytest.mark.parametrize("cache_dtype", ["", "int8"])
+def test_fused_scan_matches_per_step_loop(small_model, cache_dtype):
+    """Acceptance: decode_steps_paged(K) == K iterations of
+    decode_step_paged + host argmax, bit-identical tokens (f32 and int8)."""
+    cfg, opts, params = small_model
+    import dataclasses
+    opts = dataclasses.replace(opts, cache_dtype=cache_dtype)
+    K = 6
+    cache, tok0, lens, pt = _paged_setup(cfg, params, opts, K=K)
+    want = _per_step_loop(cfg, params, opts, cache, tok0, lens, pt, K)
+    blk, _ = decode_steps_paged(cfg, params, tok0, lens, pt, cache, K, opts)
+    assert np.array_equal(np.asarray(blk), want)
+
+
+def test_fused_scan_eos_latch_emits_pads(small_model):
+    """EOS mid-block: tokens after a slot's EOS are pad_id and its length
+    freezes (writes go to the null page)."""
+    cfg, opts, params = small_model
+    K = 6
+    cache, tok0, lens, pt = _paged_setup(cfg, params, opts, K=K)
+    free = _per_step_loop(cfg, params, opts, cache, tok0, lens, pt, K)
+    eos = int(free[0, 2])
+    t = int(np.flatnonzero(free[0] == eos)[0])   # first emission of eos
+    blk, _ = decode_steps_paged(cfg, params, tok0, lens, pt, cache, K, opts,
+                                eos_id=eos, pad_id=0)
+    blk = np.asarray(blk)
+    assert np.array_equal(blk[0, :t + 1], free[0, :t + 1])  # incl. the EOS
+    assert (blk[0, t + 1:] == 0).all()                      # then pads
+    # the other slot is unaffected unless it happens to emit eos too
+    stop1 = np.flatnonzero(free[1] == eos)
+    limit = int(stop1[0]) + 1 if stop1.size else K
+    assert np.array_equal(blk[1, :limit], free[1, :limit])
+
+
+def test_fused_scan_quota_latch(small_model):
+    """A slot's device-side quota mirrors its remaining budget: emissions
+    past it are pads, and earlier tokens are unchanged."""
+    cfg, opts, params = small_model
+    K = 6
+    cache, tok0, lens, pt = _paged_setup(cfg, params, opts, K=K)
+    free = _per_step_loop(cfg, params, opts, cache, tok0, lens, pt, K)
+    blk, _ = decode_steps_paged(cfg, params, tok0, lens, pt, cache, K, opts,
+                                quota=jnp.asarray([2, K], jnp.int32))
+    blk = np.asarray(blk)
+    assert np.array_equal(blk[0, :2], free[0, :2])
+    assert (blk[0, 2:] == 0).all()
+    assert np.array_equal(blk[1], free[1])
+
+
+def test_fused_scan_done_slots_inert(small_model):
+    """Slots that start done (inactive batch lanes) emit pads only and do
+    not disturb live slots."""
+    cfg, opts, params = small_model
+    K = 4
+    cache, tok0, lens, pt = _paged_setup(cfg, params, opts, K=K)
+    free = _per_step_loop(cfg, params, opts, cache, tok0, lens, pt, K)
+    blk, _ = decode_steps_paged(cfg, params, tok0, lens, pt, cache, K, opts,
+                                done=jnp.asarray([False, True]))
+    blk = np.asarray(blk)
+    assert np.array_equal(blk[0], free[0])
+    assert (blk[1] == 0).all()
+
+
+# ------------------- manager: lookahead reservation --------------------- #
+
+def _pool_ok(kv):
+    assert kv.n_free + kv.n_evictable + kv.n_used == kv.n_pages - 1
+
+
+def test_reserve_ahead_commit_release():
+    kv = PagedKVManager(n_pages=8, page_size=4)
+    kv.allocate(0, 6)                        # 2 pages, partial second page
+    assert kv.reserve_ahead(0, 2) == []      # 8 tokens still fit 2 pages
+    claimed = kv.reserve_ahead(0, 6)         # 12 tokens -> 1 fresh page
+    assert len(claimed) == 1 and kv.n_used == 3
+    assert kv.seq_len(0) == 6                # reservation lands no tokens
+    _pool_ok(kv)
+    kv.commit_tokens(0, 6)
+    assert kv.seq_len(0) == 12
+    with pytest.raises(ValueError):
+        kv.commit_tokens(0, 1)               # beyond the reserved extent
+    # release: drop a reserved window the block never used
+    kv.reserve_ahead(0, 4)
+    assert kv.n_used == 4
+    assert kv.release_reserved(0) == 1
+    assert kv.n_used == 3 and kv.seq_len(0) == 12
+    _pool_ok(kv)
+
+
+def test_reserve_ahead_all_or_nothing_rollback():
+    kv = PagedKVManager(n_pages=8, page_size=4)
+    kv.allocate(0, 6)
+    kv.allocate(1, 20)                       # 5 pages; pool now full
+    state = (kv.n_free, kv.n_used, tuple(kv.seq_pages(0)))
+    with pytest.raises(PageAllocationError):
+        kv.reserve_ahead(0, 8)               # needs 2 pages, 0 allocatable
+    assert (kv.n_free, kv.n_used, tuple(kv.seq_pages(0))) == state
+    assert kv.drain_copies() == []           # nothing half-claimed
+    kv.free_seq(0)
+    kv.free_seq(1)
+    assert kv.n_used == 0
+    _pool_ok(kv)
+
+
+def test_reserve_ahead_cows_shared_window_page():
+    """A shared page inside the lookahead write window is copied-on-write
+    during the reservation, so the fused scan never writes into it."""
+    kv = PagedKVManager(n_pages=12, page_size=4, enable_prefix_cache=True)
+    kv.allocate(0, 6)
+    kv.register_prefix(0, list(range(6)), n_valid=4)
+    kv.allocate_shared(1, list(range(6)))    # shares seq 0's first page
+    kv._seqs[1].n_tokens = 3                 # next write hits the shared page
+    shared = kv.seq_pages(0)[0]
+    assert kv.page_ref(shared) == 2
+    claimed = kv.reserve_ahead(1, 2)
+    assert kv.seq_pages(1)[0] != shared and kv.page_ref(shared) == 1
+    assert kv.drain_copies() == [(shared, kv.seq_pages(1)[0])]
+    assert kv.seq_pages(1)[0] in claimed
+    _pool_ok(kv)
+
+
+def test_free_seq_purges_stale_pending_copies():
+    """A COW copy queued by reserve_ahead must not survive its sequence's
+    preemption: the freed dst page can be re-claimed and re-targeted before
+    the engine drains, and duplicate-dst scatters apply in undefined
+    order."""
+    kv = PagedKVManager(n_pages=12, page_size=4, enable_prefix_cache=True)
+    kv.allocate(0, 6)
+    kv.register_prefix(0, list(range(6)), n_valid=4)
+    kv.allocate_shared(1, list(range(6)))    # shares seq 0's first page
+    kv._seqs[1].n_tokens = 3                 # next write hits the shared page
+    kv.reserve_ahead(1, 2)                   # queues (shared, dst)
+    assert kv._pending_copies
+    kv.free_seq(1)                           # preempted before the drain
+    assert kv.drain_copies() == []
+    _pool_ok(kv)
+
+
+def test_preempt_during_reserved_window_releases_all_pages():
+    """Satellite acceptance: LIFO preemption hitting a slot that holds a
+    reserved lookahead window returns every page — reserved included."""
+    kv = PagedKVManager(n_pages=5, page_size=4)
+    sched = ContinuousScheduler(kv, 2, prefill_chunk=4)
+    a = Request(rid=0, prompt=[1] * 4, max_new_tokens=12)
+    b = Request(rid=1, prompt=[2] * 4, max_new_tokens=12)
+    sched.submit(a)
+    sched.submit(b)
+    (sa, _), (sb, _) = sched.admit()
+    for slot, req in ((sa, a), (sb, b)):
+        req.n_prefilled = 4
+        sched.finish_prefill(slot)
+        req.out.append(5)
+    kv.reserve_ahead(b.rid, 4)               # b holds a reserved window
+    assert kv.n_used == 3
+    # a's big reservation cannot fit beside b -> b (younger) is preempted,
+    # and ALL of b's pages (1 allocated + 1 reserved) come back
+    sched.reserve_lookahead(sa, 12)
+    assert sb not in sched.slots and sched.waiting[0] is b
+    assert b.n_preemptions == 1
+    assert kv.n_used == 4                    # a alone: 1 page + 3 reserved
+    _pool_ok(kv)
+    # b's re-admission starts from a clean allocation
+    assert b.rid not in kv._seqs
+
+
+# -------------------------- engine equivalence -------------------------- #
+
+def _reqs(cfg, n=4, seed=11, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=rng.integers(lo, hi)).tolist()
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("kv_policy,prefix_cache", [
+    ("native", True), ("native", False), ("int8", True), ("int8", False),
+])
+def test_lookahead_token_identical(small_model, kv_policy, prefix_cache):
+    """Acceptance: K=8 fused decode is token-identical to the K=1 per-token
+    path (f32 + int8, prefix cache on/off), and to the static engine under
+    the native policy."""
+    cfg, opts, params = small_model
+    reqs = _reqs(cfg)
+    outs = {}
+    for k in (1, 8):
+        eng = ServeEngine(cfg, params, opts, max_len=40,
+                          scheduler="continuous", page_size=4, max_batch=4,
+                          kv_policy=kv_policy, prefix_cache=prefix_cache,
+                          prefill_chunk=8, decode_lookahead=k)
+        outs[k] = eng.serve([r[:] for r in reqs], 6)
+        assert eng.kv_manager.n_used == 0
+    assert outs[1] == outs[8]
+    if kv_policy == "native":
+        want = ServeEngine(cfg, params, opts, max_len=40).serve(
+            [r[:] for r in reqs], 6)
+        assert outs[8] == want
+
+
+def test_lookahead_eos_mid_block_token_identical(small_model):
+    """EOS firing inside a fused block retires the request at the block
+    boundary with the same output as the per-token path."""
+    cfg, opts, params = small_model
+    reqs = _reqs(cfg, n=3, seed=12)
+    base = ServeEngine(cfg, params, opts, max_len=48,
+                       scheduler="continuous", page_size=4, max_batch=4,
+                       decode_lookahead=1).serve([r[:] for r in reqs], 10)
+    eos = base[0][4]                          # fires mid-block for K=8
+    outs = {}
+    for k in (1, 8):
+        eng = ServeEngine(cfg, params, opts, max_len=48, eos_id=eos,
+                          scheduler="continuous", page_size=4, max_batch=4,
+                          decode_lookahead=k)
+        outs[k] = eng.serve([r[:] for r in reqs], 10)
+        assert eng.kv_manager.n_used == 0
+    assert outs[1] == outs[8]
+    assert outs[8][0][-1] == eos and len(outs[8][0]) <= 10
+
+
+def test_lookahead_preemption_token_identical(small_model):
+    """A pool too small for everyone's lookahead windows preempts LIFO and
+    still reproduces the static engine's tokens."""
+    cfg, opts, params = small_model
+    reqs = [list(range(1, 5)), list(range(5, 9))]
+    want = ServeEngine(cfg, params, opts, max_len=32).serve(
+        [r[:] for r in reqs], 12)
+    eng = ServeEngine(cfg, params, opts, max_len=32, scheduler="continuous",
+                      page_size=4, max_batch=2, n_pages=6,
+                      decode_lookahead=4)
+    assert eng.serve([r[:] for r in reqs], 12) == want
+    assert eng.stats.preemptions >= 1
+    assert eng.kv_manager.n_used == 0
+
+
+def test_static_generate_lookahead_identical(small_model):
+    """The static engine's fused blocks emit the same columns for every K,
+    including the EOS early-exit step."""
+    cfg, opts, params = small_model
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (3, 6),
+                                            1, cfg.vocab))
+    outs = {k: ServeEngine(cfg, params, opts, max_len=64,
+                           decode_lookahead=k).generate(prompts, 12)
+            for k in (1, 4, 8)}
+    assert outs[1] == outs[4] == outs[8]
+    eos = outs[1][0][3]
+    eouts = {k: ServeEngine(cfg, params, opts, max_len=64, eos_id=eos,
+                            decode_lookahead=k).generate(prompts, 12)
+             for k in (1, 4, 8)}
+    assert eouts[1] == eouts[4] == eouts[8]
+    assert len(eouts[1][0]) <= 12
+
+
+# ---------------------- sync / compile accounting ----------------------- #
+
+def test_host_sync_bound_and_decode_compiles(small_model):
+    """Satellite acceptance: a T-token decode takes <= ceil(T/K) + O(1)
+    host syncs, and the fixed block shape compiles once (the counter
+    mirrors prefill_compiles)."""
+    cfg, opts, params = small_model
+    T, K = 16, 8
+    rng = np.random.default_rng(13)
+    req = [rng.integers(1, cfg.vocab, size=5).tolist()]
+    eng = ServeEngine(cfg, params, opts, max_len=32, scheduler="continuous",
+                      page_size=4, max_batch=2, prefill_chunk=8,
+                      decode_lookahead=K)
+    eng.serve([req[0][:]], T)
+    s = eng.stats
+    assert s.host_syncs <= -(-T // K) + 2    # 1 prefill chunk + 2 blocks
+    assert s.decode_compiles == 1
+    # the same workload at K=1 syncs ~T times; K=8 must be strictly fewer
+    eng1 = ServeEngine(cfg, params, opts, max_len=32,
+                       scheduler="continuous", page_size=4, max_batch=2,
+                       prefill_chunk=8, decode_lookahead=1)
+    eng1.serve([req[0][:]], T)
+    assert s.host_syncs < eng1.stats.host_syncs
+    assert eng1.stats.host_syncs >= T        # per-token round-trips
+
+
+def test_decode_steps_counts_block_micro_steps(small_model):
+    """decode_steps counts launched micro-steps, so K=1 matches the legacy
+    per-token accounting."""
+    cfg, opts, params = small_model
+    req = [[7, 8, 9]]
+    eng = ServeEngine(cfg, params, opts, max_len=32, scheduler="continuous",
+                      page_size=4, max_batch=1, decode_lookahead=1)
+    eng.serve([req[0][:]], 5)
+    assert eng.stats.decode_steps == 4       # token 0 came from prefill
+
+
+# ------------------------------ helpers --------------------------------- #
+
+def test_pad_pow2():
+    assert _pad_pow2([], (0, 0)) == [(0, 0)]
+    assert _pad_pow2([(1, 2)], (0, 0)) == [(1, 2)]
+    assert _pad_pow2([(1, 2)] * 3, (0, 0)) == [(1, 2)] * 3 + [(0, 0)]
+    for n in (2, 5, 9):
+        out = _pad_pow2(list(range(n)), -1)
+        assert len(out) & (len(out) - 1) == 0   # power of two
+        assert out[:n] == list(range(n))
