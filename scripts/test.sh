@@ -1,5 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 test invocation (CPU). Usage: scripts/test.sh [extra pytest args]
+#
+# Lanes: the default (fast) lane skips tests marked `slow` — the heavy
+# engine/serve end-to-end equivalence runs — for a quick signal;
+# TEST_LANE=full runs everything, matching the ROADMAP tier-1 verify
+# (`python -m pytest -x -q`). CI runs both lanes in parallel.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,4 +13,7 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=1 ${XLA_FLAGS:-}"
 
+if [ "${TEST_LANE:-fast}" = "full" ]; then
+    exec python -m pytest -x -q "$@"
+fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -4,9 +4,11 @@ performance model for gen-AI inference over emerging memory technologies
 dry-run roofline deliverable."""
 from repro.core import (concurrency, memspec, placement, roofline, stco,
                         tiling, tpu_roofline, workload)
-from repro.core.concurrency import (ConcurrencyPoint, concurrency_sweep,
-                                    concurrent_inference, kv_dedup_factor,
+from repro.core.concurrency import (ConcurrencyPoint, HBSGridPoint,
+                                    concurrency_sweep, concurrent_inference,
+                                    hbs_interactivity_sweep, kv_dedup_factor,
                                     max_concurrency_without_spill,
+                                    min_hbs_bandwidth_for_itl,
                                     placement_with_kv_split)
 from repro.core.memspec import (ComputeSpec, MemoryHierarchy, MemoryLevel,
                                 hbs, lpddr6, npu_hierarchy, sram_chiplet,
@@ -22,8 +24,9 @@ from repro.core.workload import (TC, Kernel, Phase, decode_phase,
 __all__ = [
     "concurrency", "memspec", "placement", "roofline", "stco", "tiling",
     "tpu_roofline", "workload",
-    "ConcurrencyPoint", "concurrency_sweep", "concurrent_inference",
-    "kv_dedup_factor", "max_concurrency_without_spill",
+    "ConcurrencyPoint", "HBSGridPoint", "concurrency_sweep",
+    "concurrent_inference", "hbs_interactivity_sweep", "kv_dedup_factor",
+    "max_concurrency_without_spill", "min_hbs_bandwidth_for_itl",
     "placement_with_kv_split",
     "ComputeSpec", "MemoryHierarchy", "MemoryLevel", "hbs", "lpddr6",
     "npu_hierarchy", "sram_chiplet", "ssd_pcie", "tpu_v5e_hierarchy",

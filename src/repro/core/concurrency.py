@@ -16,7 +16,7 @@ produced, instead of the greedy capacity_aware split.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.memspec import MemoryHierarchy
@@ -150,6 +150,80 @@ def concurrency_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
                                  shared_prefix_len=shared_prefix_len,
                                  share_group=share_group)
             for n in concurrency]
+
+
+@dataclass(frozen=True)
+class HBSGridPoint:
+    """One cell of the HBS bandwidth x latency interactivity grid."""
+    bw_gbps: float
+    latency_us: float
+    point: ConcurrencyPoint
+
+    @property
+    def tps(self) -> float:
+        return self.point.aggregate_tps
+
+    @property
+    def itl_s(self) -> float:
+        """Predicted per-request inter-token latency: all concurrent
+        requests advance together, so decode wall time over the decode
+        length is the seconds each request waits between its tokens."""
+        rep = self.point.report
+        return rep.decode_time / max(rep.decode_len, 1)
+
+    @property
+    def kv_spill_frac(self) -> float:
+        return self.point.kv_spill_frac
+
+
+def hbs_interactivity_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
+                            place: Placement, *,
+                            bw_gbps: Iterable[float] = (2., 4., 8., 16., 32.),
+                            latency_us: Iterable[float] = (5., 20., 80.),
+                            n_concurrent: int = 1,
+                            prefill_len: int = 8192, decode_len: int = 256,
+                            dtype_bytes: int = 2,
+                            kv_split: Optional[Sequence[Tuple[str, float]]]
+                            = None) -> List[HBSGridPoint]:
+    """The paper's HBS requirement table, analytically: TPS and predicted
+    ITL over a bandwidth x latency grid for the ``"hbs"`` level of
+    ``hier`` — the envelope HBS must hit for a long-context large-model
+    workload to stay interactive once its KV spills past the fast tiers.
+
+    The runtime twin is ``benchmarks/hbs_sweep.py``, which drives the
+    serve engine's real page-residency offload over the same grid; a
+    ``kv_split`` observed from ``PagedKVManager.kv_tier_split()`` (landed
+    pages only — reserved lookahead pages carry no traffic) can be pinned
+    here so both halves price the same placement."""
+    hier.level("hbs")        # fail fast: with_level() would silently no-op
+    out: List[HBSGridPoint] = []
+    for bw in bw_gbps:
+        for lat in latency_us:
+            h = hier.with_level("hbs", bandwidth=bw * 1e9,
+                                latency=lat * 1e-6)
+            pt = concurrent_inference(cfg, h, place,
+                                      n_concurrent=n_concurrent,
+                                      prefill_len=prefill_len,
+                                      decode_len=decode_len,
+                                      dtype_bytes=dtype_bytes,
+                                      kv_split=kv_split)
+            out.append(HBSGridPoint(bw, lat, pt))
+    return out
+
+
+def min_hbs_bandwidth_for_itl(grid: Sequence[HBSGridPoint],
+                              itl_target_s: float) -> Dict[float, float]:
+    """Per HBS latency, the smallest swept bandwidth whose predicted ITL
+    meets the target (the paper's requirement readout); latencies whose
+    entire bandwidth sweep misses the target map to ``inf``."""
+    best: Dict[float, float] = {}
+    for g in grid:
+        if g.itl_s <= itl_target_s:
+            cur = best.get(g.latency_us, float("inf"))
+            best[g.latency_us] = min(cur, g.bw_gbps)
+        else:
+            best.setdefault(g.latency_us, float("inf"))
+    return best
 
 
 def max_concurrency_without_spill(cfg: ArchConfig, hier: MemoryHierarchy,

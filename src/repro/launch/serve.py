@@ -59,12 +59,32 @@ def main() -> None:
     ap.add_argument("--shared-doc", type=int, default=0,
                     help="prepend a shared document of this many tokens to "
                          "every request (exercises prefix dedup)")
+    ap.add_argument("--kv-fast-mb", type=float, default=None,
+                    help="cap the fast KV tier (DDR) at this many MB and "
+                         "offload the overflow to simulated HBS "
+                         "(DESIGN.md SS13); enables real page residency, "
+                         "spill/prefetch, and stall accounting")
+    ap.add_argument("--hbs-gb", type=float, default=64.0,
+                    help="HBS offload tier capacity in GB")
+    ap.add_argument("--hbs-gbps", type=float, default=None,
+                    help="override HBS bandwidth (GB/s) for migration "
+                         "timing (default: the hierarchy preset's)")
+    ap.add_argument("--hbs-us", type=float, default=None,
+                    help="override HBS issue latency (µs) for migration "
+                         "timing")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, d_model=args.d_model)
     max_len = args.prompt_len + args.new_tokens + args.shared_doc
+    hier = None
+    if args.kv_fast_mb is not None:
+        from repro.core import hbs, lpddr6, npu_hierarchy
+        hier = npu_hierarchy(
+            lpddr6(capacity_gb=args.kv_fast_mb / 1e3),
+            hbs(args.hbs_gbps or 8.0, latency_us=args.hbs_us or 20.0,
+                capacity_gb=args.hbs_gb))
     eng = ServeEngine(cfg, opts=RuntimeOptions(dtype=args.dtype),
                       kv_policy=args.kv_policy, max_len=max_len,
                       scheduler=args.scheduler, page_size=args.page_size,
@@ -72,7 +92,9 @@ def main() -> None:
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget,
                       prefix_cache=not args.no_prefix_cache,
-                      decode_lookahead=args.decode_lookahead)
+                      decode_lookahead=args.decode_lookahead,
+                      hierarchy=hier, hbs_gbps=args.hbs_gbps,
+                      hbs_latency_us=args.hbs_us)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
@@ -105,6 +127,17 @@ def main() -> None:
               f"cow={s.cow_copies} compiles={s.prefill_compiles} "
               f"ttft_p50/p95={s.ttft_p50*1e3:.1f}/{s.ttft_p95*1e3:.1f}ms "
               f"itl_p50/p95={s.itl_p50*1e3:.1f}/{s.itl_p95*1e3:.1f}ms")
+        if hier is not None:
+            # peak KV footprint priced at the ACTIVE cache width (an int8
+            # pool is 1 B/elem, not bf16's 2 — DESIGN.md SS13)
+            peak_mb = s.peak_pages_used * eng.page_nbytes / 1e6
+            fast_mb = s.peak_fast_pages * eng.page_nbytes / 1e6
+            print(f"[serve] offload: stall={s.stall_s*1e3:.1f}ms "
+                  f"spilled={s.pages_spilled}p/{s.spill_bytes/1e6:.2f}MB "
+                  f"fetched={s.pages_fetched}p/{s.fetch_bytes/1e6:.2f}MB "
+                  f"prefetch_hit={s.prefetch_hit_rate:.0%} "
+                  f"kv_width={eng.kv_dtype_bytes}B "
+                  f"peak_kv={peak_mb:.2f}MB (fast {fast_mb:.2f}MB)")
     print("[serve] first output:", outs[0][:16])
 
 

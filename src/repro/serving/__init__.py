@@ -1,9 +1,9 @@
 from repro.serving.engine import ServeEngine, ServeStats
 from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
-                                      PrefixAllocation, TierBudget,
-                                      page_bytes)
+                                      PrefixAllocation, SimulatedTierDevice,
+                                      TierBudget, page_bytes)
 from repro.serving.scheduler import ContinuousScheduler, Request
 
 __all__ = ["ServeEngine", "ServeStats", "PageAllocationError",
-           "PagedKVManager", "PrefixAllocation", "TierBudget", "page_bytes",
-           "ContinuousScheduler", "Request"]
+           "PagedKVManager", "PrefixAllocation", "SimulatedTierDevice",
+           "TierBudget", "page_bytes", "ContinuousScheduler", "Request"]

@@ -16,7 +16,12 @@ Two batching models (DESIGN.md SS9/SS10):
 * ``scheduler="continuous"`` — iteration-level batching over a paged,
   tiered KV cache: requests join/retire per decode step, pages come from a
   pool capped by a ``TierBudget`` derived from a ``MemoryHierarchy``, and
-  pool exhaustion preempts the youngest request (recompute-style). With
+  pool exhaustion preempts the youngest request (recompute-style). When
+  the budget has an offload tier (HBS), per-page residency is real: cold
+  pages spill, a block-aligned prefetch runs ahead of the fused decode
+  loop, and migration time the kernels outrun is charged as recorded
+  stall on a virtual clock (DESIGN.md SS13) — TPS/TTFT/ITL then price the
+  HBS bandwidth/latency envelope while outputs stay token-identical. With
   the native kv_policy, greedy outputs are token-identical to the static
   engine; under int8 the schedulers can diverge within quantization error,
   because the shared page pool calibrates scales once (first prefill)
@@ -38,7 +43,8 @@ from repro.models import (RuntimeOptions, copy_pages, decode_step,
                           decode_steps, decode_steps_paged, init_cache,
                           init_paged_cache, init_params, paged_supported,
                           prefill, prefill_paged_chunk)
-from repro.serving.kv_manager import PagedKVManager, TierBudget
+from repro.serving.kv_manager import (PagedKVManager, SimulatedTierDevice,
+                                      TierBudget, page_bytes)
 from repro.serving.scheduler import (PREFILLING, RUNNING, ContinuousScheduler,
                                      Request)
 
@@ -77,9 +83,27 @@ class ServeStats:
     # fused multi-step decode observability (DESIGN.md SS12)
     host_syncs: int = 0                 # device->host round-trips taken
     decode_compiles: int = 0            # distinct jitted decode shapes
+    # HBS page offload (DESIGN.md SS13): migration traffic + decode stalls
+    # charged in virtual seconds by the SimulatedTierDevice
+    stall_s: float = 0.0                # kernel launches waiting on fetches
+    spill_bytes: float = 0.0            # fast -> offload migration traffic
+    fetch_bytes: float = 0.0            # offload -> fast migration traffic
+    pages_spilled: int = 0
+    pages_fetched: int = 0
+    peak_fast_pages: int = 0            # max fast-tier (non-offload) pages
+    prefetch_hits: int = 0              # fetches that beat their kernel
+    prefetch_misses: int = 0            # fetches a kernel had to wait on
+    # runtime -> analytic bridge: the landed-page tier split observed at
+    # peak occupancy, pin-able into core.concurrency.concurrent_inference
+    kv_split_at_peak: tuple = ()
     # per-request latency samples (seconds)
     ttft: List[float] = field(default_factory=list)
     itl: List[float] = field(default_factory=list)
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        n = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / n if n else 1.0
 
     @property
     def tps(self) -> float:
@@ -116,7 +140,9 @@ class ServeEngine:
                  max_batch: int = 8, n_pages: Optional[int] = None,
                  hierarchy=None, prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = True, decode_lookahead: int = 8):
+                 prefix_cache: bool = True, decode_lookahead: int = 8,
+                 offload: bool = True, hbs_gbps: Optional[float] = None,
+                 hbs_latency_us: Optional[float] = None):
         if kv_policy == "int8":
             import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
@@ -159,11 +185,26 @@ class ServeEngine:
         self.prefill_budget = prefill_budget
         self.prefix_cache = prefix_cache
         self.n_pages_per_seq = -(-max_len // page_size)
-        kv_bytes = (jnp.dtype(opts.cache_dtype).itemsize if opts.cache_dtype
-                    else opts.jdtype.itemsize)     # int8 -> 1 via dtype
+        # active KV element width (int8 -> 1 via dtype); threaded through
+        # the manager so occupancy/migration pricing never assumes bf16
+        self.kv_dtype_bytes = (jnp.dtype(opts.cache_dtype).itemsize
+                               if opts.cache_dtype else opts.jdtype.itemsize)
+        self.page_nbytes = page_bytes(cfg, page_size, self.kv_dtype_bytes)
         self.tier_budget = (None if hierarchy is None else
                             TierBudget.from_hierarchy(
-                                hierarchy, cfg, page_size, kv_bytes))
+                                hierarchy, cfg, page_size,
+                                self.kv_dtype_bytes))
+        # HBS offload timing: migrations between the fast KV tiers and the
+        # budget's slowest tier are charged in virtual time (DESIGN.md
+        # SS13). ``hbs_gbps``/``hbs_latency_us`` override the hierarchy's
+        # offload-level numbers (the CLI/bench sweep lever). A fresh device
+        # is built per serve() so channel horizons reset between runs.
+        self._tier_device_args = None
+        if (offload and hierarchy is not None and self.tier_budget is not None
+                and self.tier_budget.offload_tier is not None):
+            self._tier_device_args = (hierarchy,
+                                      self.tier_budget.offload_tier,
+                                      hbs_gbps, hbs_latency_us)
         # requested pool size; PagedKVManager clamps it to the tier budget
         self.n_pages = (n_pages if n_pages is not None
                         else max_batch * self.n_pages_per_seq + 1)
@@ -310,14 +351,33 @@ class ServeEngine:
         ps, n_pp = self.page_size, self.n_pages_per_seq
         B = self.max_batch
         C = self.prefill_chunk
+        device = (SimulatedTierDevice.from_hierarchy(
+                      self._tier_device_args[0], self._tier_device_args[1],
+                      bw_gbps=self._tier_device_args[2],
+                      latency_us=self._tier_device_args[3])
+                  if self._tier_device_args is not None else None)
         kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget,
-                            enable_prefix_cache=self.prefix_cache)
+                            enable_prefix_cache=self.prefix_cache,
+                            dtype_bytes=self.kv_dtype_bytes,
+                            page_nbytes=self.page_nbytes,
+                            tier_device=device)
         self.kv_manager = kv
         sched = ContinuousScheduler(kv, B, prefill_chunk=C,
                                     prefill_budget=self.prefill_budget)
         cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
-        now = time.perf_counter
+        # virtual clock (SS13): wall time plus every simulated migration
+        # stall absorbed so far, so TTFT/ITL/TPS price the HBS envelope
+        voffset = 0.0
+
+        def now() -> float:
+            return time.perf_counter() + voffset
+
+        def absorb_stall(s: float) -> None:
+            nonlocal voffset
+            if s > 0:
+                voffset += s
+                self.stats.stall_s += s
 
         for i, r in enumerate(requests):
             total = len(r) + max_new_tokens
@@ -346,6 +406,18 @@ class ServeEngine:
             req.out.append(tok)
             self.stats.new_tokens += 1
 
+        def note_peak():
+            # snapshot the landed-page split whenever occupancy peaks —
+            # prefill-time peaks included (a run may never decode, e.g.
+            # every request finishing at its first token)
+            if (self.tier_budget is not None
+                    and kv.n_used >= self.stats.peak_pages_used):
+                self.stats.kv_split_at_peak = kv.kv_tier_split()
+            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
+                                             kv.n_used)
+            self.stats.peak_fast_pages = max(self.stats.peak_fast_pages,
+                                             kv.fast_pages_used)
+
         def apply_copies():
             nonlocal cache
             pairs = kv.drain_copies()
@@ -358,7 +430,11 @@ class ServeEngine:
                                          jnp.asarray(pairs, jnp.int32))
 
         while sched.has_work:
-            sched.admit()
+            admitted = sched.admit()
+            if admitted:
+                # start migrating any offload-resident cached-prefix pages
+                # toward the fast tiers before their first prefill chunk
+                kv.prefetch_seqs([r.rid for _, r in admitted], now())
             apply_copies()       # COW copies must land before any KV write
 
             # ---- chunked prefill, bounded by the per-step budget ---- #
@@ -376,6 +452,9 @@ class ServeEngine:
                     pt = kv.table_row(req.rid, n_pp)[None]
                     self._chunk_shapes.add(((1, C), not calibrated))
                     t0 = now()
+                    # cached prefix pages may be offload-resident: wait
+                    # out their migration before the chunk launches
+                    absorb_stall(kv.residency_stall([req.rid], t0))
                     logits, cache = self._prefill_chunk(
                         self.params, jnp.asarray(toks), cache,
                         jnp.asarray(pt), jnp.int32(start),
@@ -388,6 +467,7 @@ class ServeEngine:
                     self.stats.prefill_tokens_computed += n_real
                     budget -= C
                     req.n_prefilled = start + n_real
+                    kv.mark_written(req.rid, req.n_prefilled)
                     # index finished full pages right away so concurrent
                     # shared-prefix admissions hit them mid-prefill
                     kv.register_prefix(req.rid, pf,
@@ -401,8 +481,7 @@ class ServeEngine:
                             sched.retire(slot)
 
             running = sched.running()
-            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
-                                             kv.n_used)
+            note_peak()
             if not running:
                 if sched.has_work:
                     continue     # prefills advance / admissions retry
@@ -422,8 +501,7 @@ class ServeEngine:
             running = [(s, r) for s, r in running
                        if s in sched.slots and r.state == RUNNING]
             apply_copies()   # COW from reservations lands before the scan
-            self.stats.peak_pages_used = max(self.stats.peak_pages_used,
-                                             kv.n_used)
+            note_peak()
 
             # ---- one fused K-step decode block over the RUNNING slots --- #
             # sampling, EOS latching, and length advance happen on device;
@@ -445,6 +523,11 @@ class ServeEngine:
             n_steps = min(K, _next_pow2(int(quota.max())))
             self._decode_shapes.add(("paged", B, n_steps))
             t0 = now()
+            # fetch-wait barrier (SS13): every page this block attends over
+            # must be fast-resident — or its streamed read landed — before
+            # the kernel launches; a block that outruns its prefetch
+            # absorbs the residual as recorded stall, never a silent win
+            absorb_stall(kv.residency_stall([r.rid for _, r in running], t0))
             blk, cache = self._decode_fused(
                 self.params, jnp.asarray(tokens), jnp.asarray(seq_lens),
                 jnp.asarray(tables), cache, n_steps=n_steps,
@@ -471,10 +554,25 @@ class ServeEngine:
                 if fin:
                     sched.retire(slot)       # frees surplus reserved pages
 
+            # prefetch AHEAD of the next block, backdated to this block's
+            # launch: the next block reads the same sequences' pages, so
+            # any of them demoted to (or streamed from) the offload tier
+            # migrates while this block was computing — at generous HBS
+            # bandwidth the next barrier then sees zero stall
+            cont = [r.rid for s, r in running if s in sched.slots]
+            if cont:
+                kv.prefetch_seqs(cont, t0)
+
         self.stats.requests += len(requests)
         self.stats.cached_prefix_tokens += kv.dedup_tokens
         self.stats.pages_deduped += kv.dedup_hits
         self.stats.cow_copies += kv.cow_copies
+        self.stats.spill_bytes += kv.spill_bytes
+        self.stats.fetch_bytes += kv.fetch_bytes
+        self.stats.pages_spilled += kv.n_spills
+        self.stats.pages_fetched += kv.n_fetches
+        self.stats.prefetch_hits += kv.prefetch_hits
+        self.stats.prefetch_misses += kv.prefetch_misses
         self.stats.prefill_compiles = len(self._chunk_shapes)
         self.stats.decode_compiles = len(self._decode_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"

@@ -1,5 +1,5 @@
-"""Paged, tiered KV-cache manager with shared-prefix page reuse
-(DESIGN.md SS10/SS11).
+"""Paged, tiered KV-cache manager with shared-prefix page reuse and real
+per-page tier residency (DESIGN.md SS10/SS11/SS13).
 
 The runtime half of the paper's capacity-pressure story: the KV cache is a
 pool of fixed-size pages shared by all in-flight sequences, indirected
@@ -9,6 +9,21 @@ tiers can physically hold, and reports the pool's occupancy *as a tier
 split* — the same ``((level, fraction), ...)`` shape the analytical
 placement model consumes — so runtime admission pressure and analytical
 spill predictions are computed from one source of truth.
+
+Tier residency is *real*, not an accounting fiction (SS13): every
+assigned page lives in exactly one tier of the budget, tracked in a
+per-page residency map. New pages land in the fastest tier with room and
+overflow into the slowest ("offload") tier; a block-aligned rebalance
+pass (``prefetch_seqs`` / ``residency_stall``) promotes the pages a
+scheduled sequence is about to attend over back into the fast tiers,
+demoting LRU-cold pages to the offload tier to make room. Migration time
+is charged by a ``SimulatedTierDevice`` in *virtual seconds* — per-batch
+issue latency plus bytes/bandwidth on independent spill/fetch DMA
+channels — so a decode block that outruns its prefetch records the
+residual as stall time instead of silently winning. The page payloads
+themselves never move (the device pool is one array); only the residency
+map and the virtual clock change, which keeps offload runs token-identical
+to no-offload runs by construction.
 
 Prefix sharing (SS11) attacks the capacity term directly: pages are
 refcounted, full pages of completed prefixes are registered in a
@@ -47,6 +62,51 @@ def page_bytes(cfg: ArchConfig, page_size: int, dtype_bytes: int = 2) -> int:
     return per_tok * page_size
 
 
+@dataclass
+class SimulatedTierDevice:
+    """Virtual-time migration engine between the fast KV tiers and the
+    offload tier (DESIGN.md SS13).
+
+    Two independent DMA channels — ``"in"`` (fetch: offload -> fast) and
+    ``"out"`` (spill: fast -> offload) — each a single queue whose busy
+    horizon advances by the offload tier's issue latency once per
+    *batched* migration plus ``bytes / bandwidth``. All times are virtual
+    seconds on the caller's clock (the engine passes
+    ``perf_counter() + accumulated_stall``); the device never sleeps and
+    never moves data — it only answers "when would this transfer have
+    completed on real HBS", which the engine converts into decode stalls.
+    """
+    bandwidth: float                     # bytes/s across the offload link
+    latency: float                       # seconds per migration batch issue
+    _free: Dict[str, float] = field(
+        default_factory=lambda: {"in": 0.0, "out": 0.0})
+    busy_s: Dict[str, float] = field(
+        default_factory=lambda: {"in": 0.0, "out": 0.0})
+
+    @classmethod
+    def from_hierarchy(cls, hier, offload_tier: str, *,
+                       bw_gbps: Optional[float] = None,
+                       latency_us: Optional[float] = None
+                       ) -> "SimulatedTierDevice":
+        """Timing from the hierarchy's offload level, with CLI-style
+        overrides (``bw_gbps`` in GB/s, ``latency_us`` in µs)."""
+        lv = hier.level(offload_tier)
+        bw = lv.bandwidth if bw_gbps is None else bw_gbps * 1e9
+        lat = lv.latency if latency_us is None else latency_us * 1e-6
+        if bw <= 0:
+            raise ValueError(f"offload tier {offload_tier!r} needs a "
+                             f"positive bandwidth, got {bw}")
+        return cls(bandwidth=bw, latency=max(lat, 0.0))
+
+    def transfer(self, channel: str, n_bytes: float, now: float) -> float:
+        """Enqueue one batched migration; returns its completion time."""
+        start = max(self._free[channel], now)
+        done = start + self.latency + n_bytes / self.bandwidth
+        self.busy_s[channel] += done - start
+        self._free[channel] = done
+        return done
+
+
 @dataclass(frozen=True)
 class TierBudget:
     """Per-tier page counts, preferred (fastest) tier first."""
@@ -56,16 +116,33 @@ class TierBudget:
     def total_pages(self) -> int:
         return sum(n for _, n in self.tiers)
 
+    @property
+    def offload_tier(self) -> Optional[str]:
+        """The slowest tier — spill target when the faster tiers are over
+        budget. None when the budget has a single tier (nowhere to spill)."""
+        return self.tiers[-1][0] if len(self.tiers) > 1 else None
+
+    @property
+    def fast_pages(self) -> int:
+        """Pages the non-offload ("fast") tiers hold together."""
+        if len(self.tiers) == 1:
+            return self.tiers[0][1]
+        return sum(n for _, n in self.tiers[:-1])
+
     @classmethod
     def from_hierarchy(cls, hier, cfg: ArchConfig, page_size: int,
                        dtype_bytes: int = 2,
                        kv_tiers: Sequence[str] = DEFAULT_KV_TIERS,
-                       reserve_bytes: Dict[str, float] = None) -> "TierBudget":
+                       reserve_bytes: Dict[str, float] = None,
+                       uncapped_pages: Optional[int] = None) -> "TierBudget":
         """Pages per tier from the hierarchy's KV-eligible capacities.
 
         ``reserve_bytes`` subtracts non-KV residency (weights, activations)
         per level before converting the remainder to pages — e.g. the output
-        of ``workload.resident_bytes`` routed through a placement."""
+        of ``workload.resident_bytes`` routed through a placement. A tier
+        with ``capacity=None`` has no physical page count; admission checks
+        built on ``total_pages`` would be meaningless, so it raises unless
+        the caller supplies an explicit ``uncapped_pages`` cap for it."""
         pb = page_bytes(cfg, page_size, dtype_bytes)
         reserve = reserve_bytes or {}
         tiers: List[Tuple[str, int]] = []
@@ -76,7 +153,13 @@ class TierBudget:
                 continue
             cap = lv.capacity
             if cap is None:
-                tiers.append((name, 1 << 30))
+                if uncapped_pages is None:
+                    raise ValueError(
+                        f"tier {name!r} has no capacity; pass an explicit "
+                        f"uncapped_pages= cap (a made-up huge page count "
+                        f"would make total_pages-based admission "
+                        f"meaningless)")
+                tiers.append((name, uncapped_pages))
                 continue
             avail = max(cap - reserve.get(name, 0.0), 0.0)
             n = int(avail // pb)
@@ -97,6 +180,11 @@ class PageAllocationError(RuntimeError):
 class _SeqAlloc:
     pages: List[int] = field(default_factory=list)
     n_tokens: int = 0
+    # tokens whose KV has actually been written ("landed"). Defaults to
+    # n_tokens for direct-manager users (allocate == prefill imminent);
+    # the chunked-prefill scheduler resets it via mark_written so pages
+    # the prefill has not reached yet are capacity, not traffic.
+    n_written: int = 0
 
 
 @dataclass(frozen=True)
@@ -127,7 +215,10 @@ class PagedKVManager:
 
     def __init__(self, n_pages: int, page_size: int, *,
                  tier_budget: Optional[TierBudget] = None,
-                 enable_prefix_cache: bool = False):
+                 enable_prefix_cache: bool = False,
+                 dtype_bytes: int = 2,
+                 page_nbytes: Optional[float] = None,
+                 tier_device: Optional[SimulatedTierDevice] = None):
         if tier_budget is not None:
             n_pages = min(n_pages, tier_budget.total_pages + 1)
         if n_pages < 2:
@@ -136,6 +227,31 @@ class PagedKVManager:
         self.page_size = page_size
         self.tier_budget = tier_budget
         self.enable_prefix_cache = enable_prefix_cache
+        # active KV element width (int8 cache -> 1); prices occupancy and
+        # migration traffic — never hardcode 2 downstream of this
+        self.dtype_bytes = dtype_bytes
+        self.page_nbytes = float(page_nbytes or 0.0)
+        self.tier_device = tier_device
+        # --- per-page tier residency (SS13) --- #
+        # every ASSIGNED page (referenced or cached-evictable) lives in
+        # exactly one budget tier; free pages are unassigned
+        self._tier: Dict[int, str] = {}
+        self._tier_used: Dict[str, int] = (
+            {name: 0 for name, _ in tier_budget.tiers}
+            if tier_budget is not None else {})
+        self._offload = (tier_budget.offload_tier
+                         if tier_budget is not None else None)
+        self._lru: Dict[int, int] = {}        # page -> last-touch stamp
+        self._stamp = 0
+        self._ready_at: Dict[int, float] = {} # in-flight fetch completion
+        self._fetch_pending: set = set()      # fetched, not yet waited on
+        # offload observability (engine folds these into ServeStats)
+        self.spill_bytes = 0.0
+        self.fetch_bytes = 0.0
+        self.n_spills = 0
+        self.n_fetches = 0
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
         self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> 1
         self._seqs: Dict[int, _SeqAlloc] = {}
         self._ref: Dict[int, int] = {}                 # page -> refcount
@@ -208,6 +324,8 @@ class PagedKVManager:
             page, _ = self._evictable.popitem(last=False)
             self._unregister_page(page)
             self.evictions += 1
+            # reused as a fresh page: its old residency is meaningless
+            self._drop_residency(page)
             return page
         raise PageAllocationError("page pool exhausted")
 
@@ -215,6 +333,10 @@ class PagedKVManager:
         if self._ref.get(page, 0) == 0:
             self._evictable.pop(page, None)   # revived from the cache
             self._n_used += 1
+            if page not in self._tier:        # fresh claim: assign a tier
+                self._assign_tier(page)
+            else:                             # cache revival keeps its tier
+                self._touch(page)
         self._ref[page] = self._ref.get(page, 0) + 1
 
     def _decref(self, page: int) -> None:
@@ -225,8 +347,14 @@ class PagedKVManager:
             del self._ref[page]
             self._n_used -= 1
             if page in self._page_key:        # stays cached, evictable
-                self._evictable[page] = None
+                self._evictable[page] = None  # (keeps its tier residency)
+                # cancel any in-flight fetch: the owner is gone, and a
+                # stale pending entry would both shield the page from
+                # spill forever and hand a later revival a phantom hit
+                self._fetch_pending.discard(page)
+                self._ready_at.pop(page, None)
             else:
+                self._drop_residency(page)
                 self._free.append(page)
         else:
             self._ref[page] = r
@@ -244,6 +372,173 @@ class PagedKVManager:
             kids.pop(key, None)
             if not kids:
                 del self._children[parent]
+
+    # --------------------------- tier residency ------------------------ #
+    # Every assigned page lives in exactly one budget tier (DESIGN.md
+    # SS13). New pages land in the fastest tier with room and overflow
+    # into the offload (slowest) tier; the block-aligned rebalance below
+    # swaps LRU-cold fast pages against the offload-resident pages a
+    # scheduled sequence is about to attend over.
+
+    def page_tier(self, page: int) -> Optional[str]:
+        """Residency tier of an assigned page (None: free/untracked)."""
+        return self._tier.get(page)
+
+    def tier_occupancy_pages(self) -> Dict[str, int]:
+        """Assigned pages per tier (referenced + cached-evictable)."""
+        return dict(self._tier_used)
+
+    @property
+    def fast_pages_used(self) -> int:
+        """Assigned pages resident in the non-offload tiers."""
+        if self._offload is None:
+            return sum(self._tier_used.values())
+        return sum(n for t, n in self._tier_used.items()
+                   if t != self._offload)
+
+    def _touch(self, page: int) -> None:
+        self._stamp += 1
+        self._lru[page] = self._stamp
+
+    def _drop_residency(self, page: int) -> None:
+        tier = self._tier.pop(page, None)
+        if tier is not None:
+            self._tier_used[tier] -= 1
+        self._lru.pop(page, None)
+        self._ready_at.pop(page, None)
+        self._fetch_pending.discard(page)
+
+    def _assign_tier(self, page: int) -> None:
+        """Fastest tier with budget room; overflow goes straight to the
+        offload tier (no churn during bulk prefill allocation — the
+        rebalance pass promotes what the kernels actually touch)."""
+        if self.tier_budget is None:
+            return
+        for name, cap in self.tier_budget.tiers:
+            if self._tier_used[name] < cap:
+                self._tier[page] = name
+                self._tier_used[name] += 1
+                self._touch(page)
+                return
+        raise AssertionError(
+            "page pool exceeds the tier budget (pool is clamped to "
+            "total_pages + 1 at construction)")
+
+    def _spill_victims(self, pinned: set) -> List[int]:
+        """LRU-cold spill candidates, coldest first: fast-resident pages
+        that are neither pinned by the sequences being prepared nor have a
+        fetch in flight (demoting a page mid-migration would let its owner
+        consume a stale hit and attend over it for free). One sorted pass
+        per rebalance, popped in order, instead of a full scan per needed
+        page."""
+        return [p for _, p in sorted(
+            (self._lru.get(p, 0), p) for p, tier in self._tier.items()
+            if tier != self._offload and p not in pinned
+            and p not in self._fetch_pending)]
+
+    def _ensure_fast(self, seq_ids: Sequence[int], now: float
+                     ) -> Tuple[float, int]:
+        """Issue one batched migration making the given sequences' pages
+        fast-tier resident: each offload-resident LANDED page swaps tiers
+        with an LRU-cold unpinned fast page (spill charged on the "out"
+        channel, the promotion on the "in" channel). Traffic follows
+        content, not capacity: reserved-but-unwritten pages (lookahead
+        windows, un-prefilled tails) hold no KV, so they are pinned
+        against spill and promoted for free when room remains, but never
+        charge fetch bytes — mirroring the ``kv_tier_split`` landed-pages
+        rule. Likewise a spill victim is only charged if it carries
+        content (landed or cached-evictable). Pages that cannot fit — the
+        pinned working set itself exceeds the fast budget — stay
+        offload-resident and are *streamed*: the read is charged now and
+        will be charged again next block. Returns ``(ready_time,
+        n_pages_fetched)``; ``ready_time`` also covers still-in-flight
+        fetches issued by an earlier prefetch."""
+        if self.tier_budget is None or self._offload is None:
+            return now, 0
+        landed = self._landed_pages()
+        pinned: set = set()
+        need: List[int] = []                 # content-bearing: charged
+        empty: List[int] = []                # write targets: free promote
+        for sid in seq_ids:
+            for p in self._seqs[sid].pages:
+                if p in pinned:
+                    continue
+                pinned.add(p)
+                if self._tier.get(p) != self._offload:
+                    continue
+                # skip pages whose fetch is already in flight (or landed
+                # but not yet consumed by a wait) — re-issuing would
+                # double-charge a streamed page per block
+                if p in self._fetch_pending:
+                    continue
+                (need if p in landed else empty).append(p)
+        ready = now
+        for p in pinned:
+            t = self._ready_at.get(p)
+            if t is not None and t > ready:
+                ready = t                    # prefetch still in flight
+        if not need and not empty:
+            return ready, 0
+        victims = self._spill_victims(pinned)
+        # evictable cached pages hold real KV too — spilling them costs
+        content = landed | set(self._evictable)
+        vi = 0
+        n_spilled = 0
+        for p in need + empty:               # recurring reads fill first
+            if vi >= len(victims):
+                break                        # fast full of pinned: stream
+            victim = victims[vi]
+            vi += 1
+            fast_tier = self._tier[victim]
+            self._tier[victim] = self._offload
+            self._tier[p] = fast_tier        # swap keeps per-tier counts
+            if victim in content:
+                n_spilled += 1
+        for p in pinned:                     # touch AFTER victim selection
+            self._touch(p)
+        pb = self.page_nbytes
+        done = now
+        if self.tier_device is not None:
+            if n_spilled:
+                self.tier_device.transfer("out", n_spilled * pb, now)
+            if need:
+                done = self.tier_device.transfer("in", len(need) * pb, now)
+        self.n_spills += n_spilled
+        self.spill_bytes += n_spilled * pb
+        self.n_fetches += len(need)
+        self.fetch_bytes += len(need) * pb
+        for p in need:
+            self._ready_at[p] = done
+            self._fetch_pending.add(p)
+        return max(ready, done), len(need)
+
+    def prefetch_seqs(self, seq_ids: Sequence[int], now: float) -> float:
+        """Block-aligned prefetch, issued *ahead* of the fused decode loop:
+        start migrating every page the given sequences attend over toward
+        the fast tiers, without waiting. ``now`` may be backdated to the
+        previous kernel's launch time so the transfer overlaps compute.
+        Returns the virtual completion time."""
+        ready, _ = self._ensure_fast(seq_ids, now)
+        return ready
+
+    def residency_stall(self, seq_ids: Sequence[int], now: float) -> float:
+        """Fetch-wait barrier before a kernel launch: demand-fetches any
+        page still offload-resident (a prefetch miss) and returns the
+        stall the kernel must absorb until every page's migration
+        completes. Consumes the prefetch hit/miss accounting: a fetched
+        page whose migration finished by ``now`` is a hit."""
+        ready, _ = self._ensure_fast(seq_ids, now)
+        for sid in seq_ids:
+            for p in self._seqs[sid].pages:
+                if p not in self._fetch_pending:
+                    continue
+                self._fetch_pending.discard(p)
+                if self._ready_at.get(p, now) <= now:
+                    self.prefetch_hits += 1
+                    self._ready_at.pop(p, None)
+                else:
+                    self.prefetch_misses += 1
+        return max(0.0, ready - now)
 
     # ---------------------------- allocation --------------------------- #
     def allocate(self, seq_id: int, n_tokens: int, *,
@@ -264,7 +559,8 @@ class PagedKVManager:
             p = self._take_page()
             self._incref(p)
             pages.append(p)
-        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens)
+        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens,
+                                       n_written=n_tokens)
         return list(pages)
 
     def allocate_shared(self, seq_id: int, tokens: Sequence[int], *,
@@ -342,7 +638,8 @@ class PagedKVManager:
             p = self._take_page()
             self._incref(p)
             pages.append(p)
-        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens)
+        self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens,
+                                       n_written=n_tokens)
         self.dedup_hits += len(shared)
         self.dedup_tokens += n_cached + partial
         return PrefixAllocation(tuple(pages), n_cached + partial)
@@ -431,6 +728,16 @@ class PagedKVManager:
                 f"commit of {n} tokens for seq {seq_id} exceeds its "
                 f"reserved pages (reserve_ahead first)")
         s.n_tokens += n
+        s.n_written = s.n_tokens
+
+    def mark_written(self, seq_id: int, n: int) -> None:
+        """Set the landed-KV extent to ``n`` tokens (clamped to the
+        tracked length). The chunked-prefill scheduler resets this to the
+        cached-prefix length at admission and advances it per chunk, so
+        pages the prefill has not reached yet are priced as capacity, not
+        attention/migration traffic (the ``_landed_pages`` rule)."""
+        s = self._seqs[seq_id]
+        s.n_written = max(0, min(n, s.n_tokens))
 
     def release_reserved(self, seq_id: int) -> int:
         """Return reserved-but-unwritten pages (past the landed extent) to
@@ -459,6 +766,7 @@ class PagedKVManager:
         else:
             self.ensure_writable(seq_id, s.n_tokens)
         s.n_tokens += 1
+        s.n_written = s.n_tokens
         return new_page
 
     def free_seq(self, seq_id: int) -> int:
@@ -547,32 +855,59 @@ class PagedKVManager:
         return row
 
     # --------------------------- tier feedback ------------------------- #
+    def _landed_pages(self) -> set:
+        """Pages holding written KV a kernel would read: each sequence's
+        pages up to its written extent. Reserved-but-unwritten lookahead
+        pages (``reserve_ahead``) and prompt pages the chunked prefill has
+        not reached yet (``mark_written``) are excluded — they occupy
+        capacity but carry no attention traffic, so pricing them would
+        overstate the traffic mass. Shared pages count once."""
+        landed: set = set()
+        for s in self._seqs.values():
+            landed.update(s.pages[:self.pages_needed(s.n_written)])
+        return landed
+
     def kv_tier_split(self) -> Tuple[Tuple[str, float], ...]:
-        """Occupied pages as a tier split, fast tier filled first.
+        """Landed pages as a tier split, by REAL per-page residency.
 
         Matches the ``Placement.splits`` shape so the analytical model can
-        price attention traffic with the runtime pool's actual placement.
-        Shared pages count once — prefix dedup shrinks the split's mass."""
-        used = self.n_used
-        if not used:
-            return ()
+        price attention traffic with the tier placement the runtime pool
+        actually produced (spills, prefetches and all) — not an analytic
+        fast-tier-first fill. Shared pages count once — prefix dedup
+        shrinks the split's mass; reserved lookahead pages are capacity,
+        not traffic, and are excluded."""
         if self.tier_budget is None:
             raise ValueError(
                 "kv_tier_split() needs tier information: construct the "
                 "manager with tier_budget=TierBudget.from_hierarchy(...)")
-        out: List[Tuple[str, float]] = []
-        rem = used
-        for name, cap in self.tier_budget.tiers:
-            take = min(rem, cap)
-            if take > 0:
-                out.append((name, take / used))
-                rem -= take
-            if rem == 0:
-                break
-        return tuple(out)
+        landed = self._landed_pages()
+        if not landed:
+            return ()
+        counts: Dict[str, int] = {}
+        for p in landed:
+            tier = self._tier.get(p)
+            if tier is not None:
+                counts[tier] = counts.get(tier, 0) + 1
+        total = len(landed)
+        return tuple((name, counts[name] / total)
+                     for name, _ in self.tier_budget.tiers
+                     if counts.get(name))
 
-    def tier_occupancy_bytes(self, cfg: ArchConfig, dtype_bytes: int = 2
+    def tier_occupancy_bytes(self, cfg: Optional[ArchConfig] = None,
+                             dtype_bytes: Optional[int] = None
                              ) -> Dict[str, float]:
-        pb = page_bytes(cfg, self.page_size, dtype_bytes)
-        return {name: frac * self.n_used * pb
+        """Landed-KV bytes per tier, priced at the ACTIVE cache width
+        (``self.dtype_bytes``, e.g. 1 for an int8 cache) unless the caller
+        overrides — an int8 pool must not be priced at bf16 widths."""
+        if self.page_nbytes and dtype_bytes is None:
+            pb = self.page_nbytes
+        else:
+            if cfg is None:
+                raise ValueError("pass cfg= (or construct the manager with "
+                                 "page_nbytes=) to price occupancy")
+            pb = page_bytes(cfg, self.page_size,
+                            self.dtype_bytes if dtype_bytes is None
+                            else dtype_bytes)
+        n_landed = len(self._landed_pages())
+        return {name: frac * n_landed * pb
                 for name, frac in self.kv_tier_split()}

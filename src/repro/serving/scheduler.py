@@ -23,6 +23,14 @@ the final output (greedy decode is deterministic). With the prefix cache
 enabled, a victim's full pages are registered before the free, so its
 re-admission — and any request sharing its prefix — hits the cache instead
 of recomputing.
+
+Admission is against the pool's TOTAL capacity — every tier of the
+``TierBudget``, fast tiers plus the HBS offload tier — not the fast tiers
+alone (DESIGN.md SS13). A long-context request whose KV exceeds the fast
+budget is admitted and runs with its cold pages spilled to the offload
+tier; the engine's per-block prefetch/fetch-wait barrier charges the
+migration time as decode stall instead of this scheduler preempting it.
+Preemption remains the response to *total* exhaustion only.
 """
 from __future__ import annotations
 
@@ -104,11 +112,14 @@ class ContinuousScheduler:
 
     # ------------------------------ submit ----------------------------- #
     def submit(self, req: Request) -> None:
+        # sized against TOTAL capacity (fast tiers + offload tier): a
+        # request bigger than the fast budget runs spilled, not rejected
         total = len(req.prompt) + req.max_new_tokens
         if not self.kv.fits_at_all(total):
             raise ValueError(
                 f"request {req.rid} needs {self.kv.pages_needed(total)} pages"
-                f" but the pool only has {self.kv.n_pages - 1}")
+                f" but the pool only has {self.kv.n_pages - 1} across all "
+                f"tiers")
         self.waiting.append(req)
 
     def _should_defer(self, req: Request) -> bool:
@@ -165,6 +176,10 @@ class ContinuousScheduler:
             else:
                 self.kv.allocate(req.rid, pf_len, reserve_tokens=padded)
                 req.n_prefilled = 0
+            if self.prefill_chunk:
+                # chunked mode: only the cached prefix holds KV so far —
+                # un-prefilled prompt pages must not be priced as traffic
+                self.kv.mark_written(req.rid, req.n_prefilled)
             req.state = PREFILLING if self.prefill_chunk else RUNNING
             req.admit_order = self._admit_stamp
             self._admit_stamp += 1

@@ -65,6 +65,7 @@ def _per_step_loop(cfg, params, opts, cache, tok, lens, pt, K):
     return np.stack(cols, axis=1)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("cache_dtype", ["", "int8"])
 def test_fused_scan_matches_per_step_loop(small_model, cache_dtype):
     """Acceptance: decode_steps_paged(K) == K iterations of
@@ -79,6 +80,7 @@ def test_fused_scan_matches_per_step_loop(small_model, cache_dtype):
     assert np.array_equal(np.asarray(blk), want)
 
 
+@pytest.mark.slow
 def test_fused_scan_eos_latch_emits_pads(small_model):
     """EOS mid-block: tokens after a slot's EOS are pad_id and its length
     freezes (writes go to the null page)."""
@@ -99,6 +101,7 @@ def test_fused_scan_eos_latch_emits_pads(small_model):
     assert np.array_equal(blk[1, :limit], free[1, :limit])
 
 
+@pytest.mark.slow
 def test_fused_scan_quota_latch(small_model):
     """A slot's device-side quota mirrors its remaining budget: emissions
     past it are pads, and earlier tokens are unchanged."""
@@ -114,6 +117,7 @@ def test_fused_scan_quota_latch(small_model):
     assert np.array_equal(blk[1], free[1])
 
 
+@pytest.mark.slow
 def test_fused_scan_done_slots_inert(small_model):
     """Slots that start done (inactive batch lanes) emit pads only and do
     not disturb live slots."""
@@ -238,6 +242,7 @@ def _reqs(cfg, n=4, seed=11, lo=3, hi=14):
             for _ in range(n)]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kv_policy,prefix_cache", [
     ("native", True), ("native", False), ("int8", True), ("int8", False),
 ])
@@ -262,6 +267,7 @@ def test_lookahead_token_identical(small_model, kv_policy, prefix_cache):
         assert outs[8] == want
 
 
+@pytest.mark.slow
 def test_lookahead_eos_mid_block_token_identical(small_model):
     """EOS firing inside a fused block retires the request at the block
     boundary with the same output as the per-token path."""
@@ -297,6 +303,7 @@ def test_lookahead_preemption_token_identical(small_model):
     assert eng.kv_manager.n_used == 0
 
 
+@pytest.mark.slow
 def test_static_generate_lookahead_identical(small_model):
     """The static engine's fused blocks emit the same columns for every K,
     including the EOS early-exit step."""

@@ -319,6 +319,7 @@ def test_prefix_cache_token_identical(small_model):
     assert stats[True].pages_deduped > 0
 
 
+@pytest.mark.slow
 def test_cow_divergence_token_identical(small_model):
     """Mid-page divergence goes through COW and stays correct."""
     cfg, opts, params = small_model
@@ -349,6 +350,7 @@ def test_identical_prompts_share_all_but_last(small_model):
     assert eng.stats.cached_prefix_tokens == 2 * 15  # all but the last token
 
 
+@pytest.mark.slow
 def test_preempt_readmit_hits_cache(small_model):
     """A preemption victim's registered pages serve its own re-admission."""
     cfg, opts, params = small_model
@@ -364,6 +366,7 @@ def test_preempt_readmit_hits_cache(small_model):
     assert eng.stats.cached_prefix_tokens > 0      # re-admit reused pages
 
 
+@pytest.mark.slow
 def test_chunked_prefill_compiles_once(small_model):
     """Acceptance: one jitted prefill for many distinct prompt lengths."""
     cfg, opts, params = small_model

@@ -1,0 +1,445 @@
+"""Real per-page tier residency, async spill/prefetch, and stall
+accounting (DESIGN.md SS13): manager invariants, migration timing,
+the satellite bugfixes (dtype width, reserved-page traffic mass,
+unknown-capacity budgets), and engine-level token identity of the
+offload path."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.serving import (PageAllocationError, PagedKVManager,
+                           SimulatedTierDevice, TierBudget)
+
+PB = 1000.0                       # page payload bytes used by unit tests
+
+
+def _kv(fast=4, offload=16, *, bw=1e6, lat=1e-3, page_size=4, n_pages=64,
+        device=True, **kw):
+    tb = TierBudget((("ddr", fast), ("hbs", offload)))
+    dev = SimulatedTierDevice(bandwidth=bw, latency=lat) if device else None
+    return PagedKVManager(n_pages, page_size, tier_budget=tb,
+                          page_nbytes=PB, tier_device=dev, **kw)
+
+
+def _check_residency(kv):
+    """The SS13 invariants, checkable after ANY operation."""
+    assigned = set(kv._tier)
+    # every referenced or cached-evictable page is in exactly one tier;
+    # free pages are untracked
+    in_use = set(kv._ref) | set(kv._evictable)
+    assert assigned == in_use
+    assert 0 not in assigned                      # null page never assigned
+    for p in kv._free:
+        assert p not in assigned
+    # per-tier counters match the residency map
+    counts = {}
+    for t in kv._tier.values():
+        counts[t] = counts.get(t, 0) + 1
+    for name, _ in kv.tier_budget.tiers:
+        assert kv.tier_occupancy_pages()[name] == counts.get(name, 0)
+    # no tier over budget — in particular fast occupancy after any spill
+    for name, cap in kv.tier_budget.tiers:
+        assert kv.tier_occupancy_pages()[name] <= cap
+    assert kv.fast_pages_used <= kv.tier_budget.fast_pages
+    # the split is a distribution over budget tiers
+    split = kv.kv_tier_split()
+    if split:
+        assert abs(sum(f for _, f in split) - 1.0) < 1e-9
+        assert all(t in dict(kv.tier_budget.tiers) for t, _ in split)
+
+
+# ------------------------- residency invariants ------------------------ #
+
+def test_pages_live_in_exactly_one_tier():
+    kv = _kv(fast=4, offload=16)
+    kv.allocate(0, 6 * 4)                  # 4 fast + 2 offload overflow
+    _check_residency(kv)
+    assert kv.fast_pages_used == 4
+    tiers = [kv.page_tier(p) for p in kv.seq_pages(0)]
+    assert tiers == ["ddr"] * 4 + ["hbs"] * 2
+    kv.allocate(1, 3 * 4)                  # all offload (fast is full)
+    _check_residency(kv)
+    assert [kv.page_tier(p) for p in kv.seq_pages(1)] == ["hbs"] * 3
+    kv.free_seq(0)
+    _check_residency(kv)
+    assert kv.fast_pages_used == 0         # freed pages leave their tier
+    kv.free_seq(1)
+    _check_residency(kv)
+    assert sum(kv.tier_occupancy_pages().values()) == 0
+
+
+def test_fast_budget_respected_after_spill_and_fetch():
+    kv = _kv(fast=3, offload=16)
+    kv.allocate(0, 2 * 4)                  # 2 fast
+    kv.allocate(1, 4 * 4)                  # 1 fast + 3 offload
+    # preparing seq 1 spills seq 0's cold pages but never overfills fast
+    kv.residency_stall([1], 0.0)
+    _check_residency(kv)
+    assert kv.fast_pages_used == 3
+    assert [kv.page_tier(p) for p in kv.seq_pages(1)].count("ddr") == 3
+    # seq 0 is now (partially) offload-resident; fetching it back spills 1
+    kv.residency_stall([0], 10.0)
+    _check_residency(kv)
+    assert all(kv.page_tier(p) == "ddr" for p in kv.seq_pages(0))
+
+
+def test_lru_cold_pages_spill_first():
+    kv = _kv(fast=4, offload=16)
+    kv.allocate(0, 2 * 4)
+    kv.allocate(1, 2 * 4)                  # fast now full: 2 + 2
+    kv.residency_stall([1], 1.0)           # touch seq 1 (hotter)
+    kv.allocate(2, 2 * 4)                  # lands offload
+    kv.residency_stall([2], 2.0)           # needs 2 fast slots
+    _check_residency(kv)
+    # seq 0 (cold) was demoted; seq 1 (hot) kept its fast residency
+    assert all(kv.page_tier(p) == "hbs" for p in kv.seq_pages(0))
+    assert all(kv.page_tier(p) == "ddr" for p in kv.seq_pages(1))
+    assert all(kv.page_tier(p) == "ddr" for p in kv.seq_pages(2))
+    assert kv.n_spills == 2 and kv.spill_bytes == 2 * PB
+
+
+# ------------------------ migration timing model ----------------------- #
+
+def test_demand_fetch_charges_latency_plus_bytes_over_bandwidth():
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4 * 4)                  # 2 fast + 2 offload
+    stall = kv.residency_stall([0], 0.0)
+    assert stall == pytest.approx(1e-3 + 2 * PB / 1e5)
+    assert kv.fetch_bytes == 2 * PB and kv.prefetch_misses == 2
+    assert kv.prefetch_hits == 0
+
+
+def test_prefetch_ahead_hides_migration_time():
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4 * 4)
+    ready = kv.prefetch_seqs([0], 0.0)     # issue ahead of the block
+    assert ready > 0.0
+    # the kernel launches after the migration landed: zero stall, hits
+    assert kv.residency_stall([0], ready + 0.5) == 0.0
+    assert kv.prefetch_hits == 2 and kv.prefetch_misses == 0
+    # a block that outruns the prefetch absorbs exactly the residual
+    kv2 = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv2.allocate(0, 4 * 4)
+    ready2 = kv2.prefetch_seqs([0], 0.0)
+    late = kv2.residency_stall([0], ready2 - 0.004)
+    assert late == pytest.approx(0.004)
+    assert kv2.prefetch_misses == 2
+
+
+def test_streamed_pages_charge_per_block_but_never_double():
+    """A working set larger than the fast tiers streams from HBS: charged
+    once per block, not once per prefetch+wait pair."""
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=0.0)
+    kv.allocate(0, 6 * 4)                  # 4 pages can never fit fast
+    t = 0.0
+    kv.prefetch_seqs([0], t)
+    before = kv.fetch_bytes
+    kv.residency_stall([0], t + 1.0)       # same block: no re-charge
+    assert kv.fetch_bytes == before == 4 * PB
+    # the pages stayed offload-resident -> next block pays again
+    kv.residency_stall([0], t + 2.0)
+    assert kv.fetch_bytes == 8 * PB
+    _check_residency(kv)
+
+
+def test_reserved_unwritten_pages_carry_no_migration_traffic():
+    """Traffic follows content: lookahead pages hold no KV, so preparing
+    a block neither fetches them nor books misses — until a commit lands
+    real writes in them."""
+    kv = _kv(fast=1, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4)                      # 1 landed page (fast)
+    kv.reserve_ahead(0, 8)                 # 2 empty pages -> offload
+    assert kv.residency_stall([0], 0.0) == 0.0
+    assert kv.fetch_bytes == 0 and kv.prefetch_misses == 0
+    kv.commit_tokens(0, 8)                 # the block wrote them: landed
+    stall = kv.residency_stall([0], 1.0)
+    assert stall > 0.0 and kv.fetch_bytes == 2 * PB
+    _check_residency(kv)
+
+
+def test_empty_write_targets_promote_free_spilling_cold_content():
+    """Offload-resident write targets swap into fast for free when cold
+    unpinned pages can make room; only the content-bearing victims are
+    charged as spill traffic."""
+    kv = _kv(fast=3, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(1, 2 * 4)                  # 2 cold landed pages (fast)
+    kv.allocate(0, 4)                      # 1 landed page (fast: full)
+    kv.reserve_ahead(0, 8)                 # 2 empty pages -> offload
+    assert kv.residency_stall([0], 0.0) == 0.0      # no fetch: all empty
+    assert kv.fetch_bytes == 0
+    assert kv.n_spills == 2 and kv.spill_bytes == 2 * PB  # cold content out
+    assert all(kv.page_tier(p) == "ddr" for p in kv.seq_pages(0))
+    assert all(kv.page_tier(p) == "hbs" for p in kv.seq_pages(1))
+    _check_residency(kv)
+
+
+def test_unprefilled_prompt_pages_carry_no_migration_traffic():
+    """mark_written: prompt pages the chunked prefill has not reached yet
+    are capacity, not traffic — no fetch bytes, no stall, no split mass."""
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(1, 6 * 4)                  # long prompt: 2 fast + 4 hbs
+    kv.mark_written(1, 0)                  # admission: nothing landed yet
+    assert kv.residency_stall([1], 0.0) == 0.0
+    assert kv.fetch_bytes == 0 and kv.prefetch_misses == 0
+    assert kv.kv_tier_split() == ()        # no landed mass either
+    kv.mark_written(1, 3 * 4)              # first chunks landed 3 pages
+    stall = kv.residency_stall([1], 1.0)
+    assert stall > 0.0                     # the landed hbs page fetches
+    assert kv.fetch_bytes == 1 * PB        # ...and only it
+    _check_residency(kv)
+
+
+def test_freed_cached_page_cancels_inflight_fetch():
+    """A page freed into the evictable cache mid-fetch must drop its
+    pending state: it stays spillable and a revival pays a real fetch
+    instead of consuming a phantom hit."""
+    kv = _kv(fast=1, offload=16, bw=1e5, lat=1e-3,
+             enable_prefix_cache=True)
+    toks = list(range(1, 9))               # 2 full pages of 4
+    kv.allocate(0, len(toks))
+    kv.register_prefix(0, toks, n_valid=8)
+    # second page is offload-resident (fast=1); start migrating it
+    kv.prefetch_seqs([0], 0.0)
+    assert kv._fetch_pending
+    kv.free_seq(0)                         # owner gone mid-flight
+    assert not kv._fetch_pending and not kv._ready_at
+    _check_residency(kv)
+    # revival via the prefix cache pays a real (charged) fetch
+    before = kv.fetch_bytes
+    alloc = kv.allocate_shared(1, toks + [9])
+    assert alloc.n_cached == 8
+    stall = kv.residency_stall([1], 100.0)
+    assert kv.fetch_bytes > before and stall > 0.0
+    _check_residency(kv)
+
+
+def test_fetch_channel_serializes_batches():
+    dev = SimulatedTierDevice(bandwidth=1e3, latency=0.5)
+    a = dev.transfer("in", 1e3, now=0.0)   # 0.5 + 1.0
+    assert a == pytest.approx(1.5)
+    b = dev.transfer("in", 1e3, now=0.0)   # queues behind a
+    assert b == pytest.approx(3.0)
+    # the spill channel is independent (full duplex)
+    c = dev.transfer("out", 1e3, now=0.0)
+    assert c == pytest.approx(1.5)
+
+
+def test_without_device_migrations_are_free_but_tracked():
+    kv = _kv(fast=2, offload=16, device=False)
+    kv.allocate(0, 4 * 4)
+    assert kv.residency_stall([0], 5.0) == 0.0
+    _check_residency(kv)
+    assert kv.n_fetches == 2               # residency still migrated
+    assert all(kv.page_tier(p) == "ddr" for p in kv.seq_pages(0)[:2])
+
+
+# --------------------------- satellite bugfixes ------------------------ #
+
+def test_tier_budget_unknown_capacity_raises():
+    """S3: a capacity-less tier must not silently become 2^30 pages."""
+    from repro.core import lpddr6, npu_hierarchy
+    from repro.core.memspec import MemoryLevel
+
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2)
+    hier = npu_hierarchy(lpddr6(capacity_gb=1e-3),
+                         MemoryLevel("hbs", capacity=None, bandwidth=8e9,
+                                     latency=20e-6))
+    with pytest.raises(ValueError, match="uncapped_pages"):
+        TierBudget.from_hierarchy(hier, cfg, 16, 4)
+    tb = TierBudget.from_hierarchy(hier, cfg, 16, 4, uncapped_pages=128)
+    assert dict(tb.tiers)["hbs"] == 128
+    assert tb.total_pages < 1 << 20        # admission checks stay meaningful
+
+
+def test_kv_tier_split_excludes_reserved_unwritten_pages():
+    """S2: reserve_ahead pages are capacity, not attention traffic."""
+    kv = _kv(fast=8, offload=16)
+    kv.allocate(0, 2 * 4)                  # 2 landed pages
+    kv.reserve_ahead(0, 8)                 # +2 reserved, unwritten
+    assert len(kv.seq_pages(0)) == 4
+    split = dict(kv.kv_tier_split())
+    occ = kv.tier_occupancy_bytes()
+    assert sum(occ.values()) == pytest.approx(2 * PB)   # mass: landed only
+    assert split["ddr"] == 1.0
+    # capacity accounting still covers the reserved pages
+    assert sum(kv.tier_occupancy_pages().values()) == 4
+    kv.commit_tokens(0, 8)                 # the block landed its writes
+    assert sum(kv.tier_occupancy_bytes().values()) == pytest.approx(4 * PB)
+
+
+def test_tier_occupancy_priced_at_active_dtype_width():
+    """S1: an int8 pool must not be priced at bf16 widths."""
+    from repro.serving.kv_manager import page_bytes
+
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2)
+    tb = TierBudget((("ddr", 8), ("hbs", 8)))
+    kv8 = PagedKVManager(32, 16, tier_budget=tb, dtype_bytes=1)
+    kv16 = PagedKVManager(32, 16, tier_budget=tb, dtype_bytes=2)
+    kv8.allocate(0, 32)
+    kv16.allocate(0, 32)
+    b8 = sum(kv8.tier_occupancy_bytes(cfg).values())
+    b16 = sum(kv16.tier_occupancy_bytes(cfg).values())
+    assert b8 * 2 == b16                   # half the footprint, not double
+    assert b8 == 2 * page_bytes(cfg, 16, 1)
+
+
+def test_engine_threads_kv_dtype_width():
+    from repro.models import RuntimeOptions
+    from repro.serving import ServeEngine
+
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2,
+                  vocab=128)
+    eng = ServeEngine(cfg, opts=RuntimeOptions(dtype="float32"),
+                      kv_policy="int8", max_len=32, scheduler="continuous")
+    assert eng.kv_dtype_bytes == 1
+    native = ServeEngine(cfg, opts=RuntimeOptions(dtype="float32"),
+                         max_len=32, scheduler="continuous")
+    assert native.kv_dtype_bytes == 4
+    assert eng.page_nbytes * 4 == native.page_nbytes
+
+
+# ------------------------ hypothesis trace property --------------------- #
+
+def test_hypothesis_residency_invariants_over_random_traces():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(st.integers(0, 5),      # op kind
+                             st.integers(0, 5),      # seq id
+                             st.integers(1, 40)),    # size / k
+                   min_size=1, max_size=80)
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=ops)
+    def run(ops):
+        kv = _kv(fast=3, offload=10, n_pages=32, bw=1e4, lat=1e-3)
+        t = 0.0
+        for kind, sid, n in ops:
+            t += 0.01
+            try:
+                if kind == 0 and sid not in kv._seqs:
+                    kv.allocate(sid, n)
+                elif kind == 1 and sid in kv._seqs:
+                    kv.free_seq(sid)
+                elif kind == 2 and sid in kv._seqs:
+                    kv.reserve_ahead(sid, n % 8 + 1)
+                elif kind == 3 and sid in kv._seqs:
+                    kv.release_reserved(sid)
+                elif kind == 4 and sid in kv._seqs:
+                    kv.prefetch_seqs([sid], t)
+                elif kind == 5 and sid in kv._seqs:
+                    stall = kv.residency_stall([sid], t)
+                    assert stall >= 0.0
+                    t += stall
+            except PageAllocationError:
+                pass                                  # admission pressure
+            _check_residency(kv)
+        # drain: every page returns to the free list tier-less
+        for sid in list(kv._seqs):
+            kv.free_seq(sid)
+        _check_residency(kv)
+        assert sum(kv.tier_occupancy_pages().values()) == 0
+        assert kv.n_free == kv.n_pages - 1
+
+    run()
+
+
+# ------------------------- engine-level behaviour ----------------------- #
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    from repro.models import RuntimeOptions, init_params
+
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2,
+                  vocab=128)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    return cfg, opts, params
+
+
+def _offload_hierarchy(cfg, fast_pages, page_size=8):
+    from repro.core import hbs, lpddr6, npu_hierarchy
+    from repro.serving.kv_manager import page_bytes
+
+    pb = page_bytes(cfg, page_size, 4)
+    return npu_hierarchy(lpddr6(capacity_gb=fast_pages * pb / 1e9),
+                         hbs(8.0, latency_us=20.0, capacity_gb=1.0))
+
+
+def test_offload_token_identical_and_stall_envelope(small_model):
+    """Acceptance: generous HBS bandwidth -> token-identical to the
+    no-offload engine with (sub-µs) zero recorded stall; stingy
+    bandwidth -> same tokens, positive stall."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(1, cfg.vocab, size=n).tolist()
+            for n in (20, 9, 14)]
+    # a prefill budget covering every prompt makes the requests decode
+    # concurrently: their joint working set exceeds the fast tier, so the
+    # offload path genuinely streams landed KV instead of only writing
+    kw = dict(max_len=40, scheduler="continuous", page_size=8, max_batch=3,
+              prefill_budget=96)
+    base = ServeEngine(cfg, params, opts, **kw)
+    want = base.serve([r[:] for r in reqs], 8)
+    hier = _offload_hierarchy(cfg, fast_pages=4)
+
+    generous = ServeEngine(cfg, params, opts, **kw, hierarchy=hier,
+                           hbs_gbps=1e6, hbs_latency_us=0.0)
+    assert generous.serve([r[:] for r in reqs], 8) == want
+    assert generous.stats.stall_s < 1e-6
+    assert generous.stats.pages_fetched > 0        # the offload path ran
+
+    stingy = ServeEngine(cfg, params, opts, **kw, hierarchy=hier,
+                         hbs_gbps=1e-3, hbs_latency_us=500.0)
+    assert stingy.serve([r[:] for r in reqs], 8) == want
+    # wall-clock ITL is jit-noise-dominated on cold engines; the virtual
+    # stall is deterministic and is what the latency metrics absorb
+    assert stingy.stats.stall_s > 1e-3 > 1e-6 > generous.stats.stall_s
+
+
+def test_long_context_request_runs_spilled_not_preempted(small_model):
+    """A request whose KV exceeds the fast tier admits against TOTAL
+    capacity and runs with cold pages spilled — no preemption."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(4)
+    req = [rng.integers(1, cfg.vocab, size=40).tolist()]
+    hier = _offload_hierarchy(cfg, fast_pages=2)   # 2 pages << 6 needed
+    eng = ServeEngine(cfg, params, opts, max_len=48,
+                      scheduler="continuous", page_size=8, max_batch=2,
+                      hierarchy=hier, hbs_gbps=0.01, hbs_latency_us=20.0)
+    base = ServeEngine(cfg, params, opts, max_len=48,
+                       scheduler="continuous", page_size=8, max_batch=2)
+    want = base.serve([r[:] for r in req], 8)
+    got = eng.serve([r[:] for r in req], 8)
+    assert got == want
+    assert eng.stats.preemptions == 0
+    assert eng.stats.peak_fast_pages <= 2          # budget held
+    assert eng.stats.fetch_bytes > 0               # it streamed instead
+    assert eng.stats.stall_s > 0.0
+    assert dict(eng.stats.kv_split_at_peak).get("hbs", 0) > 0
+
+
+def test_offload_stats_reach_serve_stats(small_model):
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(5)
+    reqs = [rng.integers(1, cfg.vocab, size=16).tolist() for _ in range(3)]
+    hier = _offload_hierarchy(cfg, fast_pages=3)
+    eng = ServeEngine(cfg, params, opts, max_len=32,
+                      scheduler="continuous", page_size=8, max_batch=3,
+                      prefill_budget=96,      # concurrent decode: streams
+                      hierarchy=hier, hbs_gbps=0.01, hbs_latency_us=20.0)
+    eng.serve([r[:] for r in reqs], 8)
+    s = eng.stats
+    assert s.pages_fetched > 0 and s.fetch_bytes > 0
+    assert s.prefetch_hits + s.prefetch_misses >= s.pages_fetched > 0
+    assert 0.0 <= s.prefetch_hit_rate <= 1.0
+    # stall feeds the latency metrics: decode+prefill wall time covers it
+    assert s.prefill_s + s.decode_s >= s.stall_s
