@@ -1,0 +1,222 @@
+"""Speculative decoding sweep: acceptance and TPS speedup on the fused
+paged path (DESIGN.md SS14).
+
+Three sections, all on the real serve engine:
+
+* **ngram** — the shared-document prompt-lookup workload the paper's
+  constrained-platform story targets: every request shares a document
+  prefix and greedy decode loops through predictable continuations, so
+  the model-free n-gram draft proposes multi-token runs that the single
+  verify pass accepts. Sweeps the draft length K, recording acceptance
+  rate, TPS, speedup over spec-off, and the temp-0 token-identity gate.
+* **model_draft** — the same workload drafted by a half-width model over
+  its own paged KV pool (sync / catch-up / propose-rollback protocol).
+* **spec_x_hbs** — the compounding claim: with the fast KV tier capped
+  and cold pages in simulated HBS, every saved verify pass is a saved
+  fetch-wait barrier, so speculative decoding buys back stall exactly
+  where bandwidth is scarce.
+
+Run: PYTHONPATH=src python benchmarks/spec_sweep.py --json
+(merges its section into BENCH_serve.json next to serve_bench's).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+
+GENEROUS_GBPS = 1e6
+
+
+def _mk(cfg, params, opts, common, **kw):
+    from repro.serving import ServeEngine
+    return ServeEngine(cfg, params, opts, **common, **kw)
+
+
+def _run(eng, reqs, new_tokens):
+    """Warm the jit caches, then measure a clean pass."""
+    eng.serve([r[:] for r in reqs], new_tokens)
+    eng.stats.__init__()
+    outs = eng.serve([r[:] for r in reqs], new_tokens)
+    return outs, eng.stats
+
+
+def _workload(cfg, args):
+    """Shared-document QA shape: one document every request shares, plus a
+    short unique question suffix. Greedy decode of the reduced model then
+    revisits spans of its own context — prompt-lookup territory."""
+    rng = np.random.default_rng(0)
+    doc = rng.integers(1, cfg.vocab, size=args.doc_len).tolist()
+    return [doc + rng.integers(1, cfg.vocab, size=args.tail_len).tolist()
+            for _ in range(args.n_requests)]
+
+
+def ngram_section(cfg, params, opts, common, reqs, args) -> dict:
+    base = _mk(cfg, params, opts, common)
+    want, s0 = _run(base, reqs, args.new_tokens)
+    tps0 = s0.tps
+    rows = []
+    for k in (int(x) for x in args.k_sweep.split(",")):
+        eng = _mk(cfg, params, opts, common, spec_mode="ngram", spec_k=k)
+        outs, s = _run(eng, reqs, args.new_tokens)
+        rows.append({
+            "k": k,
+            "tps": round(s.tps, 2),
+            "speedup": round(s.tps / tps0, 3),
+            "acceptance_rate": round(s.acceptance_rate, 3),
+            "draft_proposed": s.draft_proposed,
+            "draft_accepted": s.draft_accepted,
+            "spec_blocks": s.spec_blocks,
+            "decode_steps": s.decode_steps,
+            "host_syncs": s.host_syncs,
+            "token_identical": outs == want,
+        })
+    best = max(rows, key=lambda r: r["speedup"])
+    return {
+        "baseline_tps": round(tps0, 2),
+        "baseline_decode_steps": s0.decode_steps,
+        "sweep": rows,
+        "derived": {
+            "all_token_identical": all(r["token_identical"] for r in rows),
+            "best_speedup": best["speedup"],
+            "best_k": best["k"],
+            "speedup_ge_1_2x": best["speedup"] >= 1.2,
+        },
+    }
+
+
+def model_draft_section(cfg, params, opts, common, reqs, args) -> dict:
+    base = _mk(cfg, params, opts, common)
+    want, s0 = _run(base, reqs, args.new_tokens)
+    dcfg = dataclasses.replace(
+        reduced(get_config(args.arch), d_model=args.d_model // 2,
+                n_layers=1, vocab=cfg.vocab),
+        name=cfg.name + "-draft")
+    eng = _mk(cfg, params, opts, common, spec_mode="model",
+              spec_k=args.spec_k, draft_cfg=dcfg)
+    outs, s = _run(eng, reqs, args.new_tokens)
+    return {
+        "draft_arch": dcfg.name, "k": args.spec_k,
+        "tps": round(s.tps, 2),
+        "speedup": round(s.tps / s0.tps, 3),
+        "acceptance_rate": round(s.acceptance_rate, 3),
+        "draft_proposed": s.draft_proposed,
+        "draft_accepted": s.draft_accepted,
+        "token_identical": outs == want,
+        # what this section gates is the sync/catch-up/propose-rollback
+        # PROTOCOL (identity + acceptance); wall-clock speedup needs a
+        # draft ≪ target cost ratio that a reduced CPU twin cannot
+        # provide — its per-pass dispatch floor is the target's
+        "note": "protocol + identity gate; reduced-scale draft is not "
+                "cheaper than the reduced target, so tps is not the "
+                "deployment signal here (ngram section is)",
+    }
+
+
+def spec_x_hbs_section(cfg, params, opts, common, reqs, args) -> dict:
+    from repro.core import hbs, lpddr6, npu_hierarchy
+    from repro.serving.kv_manager import page_bytes
+
+    ps = common["page_size"]
+    pb = page_bytes(cfg, ps, 4)
+    total_pages = sum(-(-(len(r) + args.new_tokens) // ps) for r in reqs)
+    fast_pages = max(total_pages // 3, 2)
+    cells = []
+    for bw in [float(x) for x in args.hbs_bw_gbps.split(",")] + \
+              [GENEROUS_GBPS]:
+        hier = npu_hierarchy(lpddr6(capacity_gb=fast_pages * pb / 1e9),
+                             hbs(bw, latency_us=20.0, capacity_gb=1.0))
+        row = {"bw_gbps": bw}
+        for mode in ("off", "ngram"):
+            eng = _mk(cfg, params, opts, common, hierarchy=hier,
+                      hbs_gbps=bw, hbs_latency_us=20.0, spec_mode=mode,
+                      spec_k=args.spec_k)
+            outs, s = _run(eng, reqs, args.new_tokens)
+            row[mode] = {
+                "tps": round(s.tps, 2),
+                "stall_ms": round(s.stall_s * 1e3, 3),
+                "itl_p95_ms": round(s.itl_p95 * 1e3, 3),
+                "fetch_mb": round(s.fetch_bytes / 1e6, 3),
+                "acceptance_rate": round(s.acceptance_rate, 3),
+            }
+        row["spec_speedup"] = round(
+            row["ngram"]["tps"] / max(row["off"]["tps"], 1e-9), 3)
+        cells.append(row)
+    return {"fast_pages": fast_pages, "grid": cells}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None,
+                    help="merge results into this JSON file under the "
+                         "'spec_sweep' key")
+    # the reduced target must carry enough compute per stack traversal for
+    # the verify pass's one-traversal-per-K-tokens advantage to beat the
+    # fused baseline's dispatch-bound 8-token blocks; a dispatch-bound toy
+    # (d_model 64) under-reports spec decoding the same way it
+    # under-reports any bandwidth-side win
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--doc-len", type=int, default=96)
+    ap.add_argument("--tail-len", type=int, default=8)
+    ap.add_argument("--n-requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=64)
+    ap.add_argument("--k-sweep", default="4,8,12")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="draft length for the model-draft and spec x HBS "
+                         "sections; match the baseline's fused block size "
+                         "(--decode-lookahead 8) so the HBS grid compares "
+                         "equal streaming cadences — KV fetch traffic per "
+                         "pass is the same, spec just lands more tokens "
+                         "per stream")
+    ap.add_argument("--hbs-bw-gbps", default="0.002,0.02")
+    ap.add_argument("--skip-model-draft", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from repro.models import RuntimeOptions, init_params
+
+    cfg = reduced(get_config(args.arch), d_model=args.d_model,
+                  n_layers=args.n_layers, vocab=args.vocab)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    reqs = _workload(cfg, args)
+    max_len = args.doc_len + args.tail_len + args.new_tokens
+    common = dict(max_len=max_len, scheduler="continuous", page_size=16,
+                  max_batch=4, prefix_cache=True)
+
+    results = {
+        "workload": {"arch": cfg.name, "doc_len": args.doc_len,
+                     "tail_len": args.tail_len,
+                     "n_requests": args.n_requests,
+                     "new_tokens": args.new_tokens},
+        "ngram": ngram_section(cfg, params, opts, common, reqs, args),
+        "spec_x_hbs": spec_x_hbs_section(cfg, params, opts, common, reqs,
+                                         args),
+    }
+    if not args.skip_model_draft:
+        results["model_draft"] = model_draft_section(cfg, params, opts,
+                                                     common, reqs, args)
+    print(json.dumps(results, indent=2))
+    if args.json:
+        merged = {}
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                merged = json.load(f)
+        merged["spec_sweep"] = results
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"[spec_sweep] merged into {args.json}")
+
+
+if __name__ == "__main__":
+    main()

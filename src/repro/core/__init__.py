@@ -6,10 +6,11 @@ from repro.core import (concurrency, memspec, placement, roofline, stco,
                         tiling, tpu_roofline, workload)
 from repro.core.concurrency import (ConcurrencyPoint, HBSGridPoint,
                                     concurrency_sweep, concurrent_inference,
+                                    expected_tokens_per_pass,
                                     hbs_interactivity_sweep, kv_dedup_factor,
                                     max_concurrency_without_spill,
                                     min_hbs_bandwidth_for_itl,
-                                    placement_with_kv_split)
+                                    placement_with_kv_split, speculative_tps)
 from repro.core.memspec import (ComputeSpec, MemoryHierarchy, MemoryLevel,
                                 hbs, lpddr6, npu_hierarchy, sram_chiplet,
                                 ssd_pcie, tpu_v5e_hierarchy)
@@ -25,9 +26,10 @@ __all__ = [
     "concurrency", "memspec", "placement", "roofline", "stco", "tiling",
     "tpu_roofline", "workload",
     "ConcurrencyPoint", "HBSGridPoint", "concurrency_sweep",
-    "concurrent_inference", "hbs_interactivity_sweep", "kv_dedup_factor",
+    "concurrent_inference", "expected_tokens_per_pass",
+    "hbs_interactivity_sweep", "kv_dedup_factor",
     "max_concurrency_without_spill", "min_hbs_bandwidth_for_itl",
-    "placement_with_kv_split",
+    "placement_with_kv_split", "speculative_tps",
     "ComputeSpec", "MemoryHierarchy", "MemoryLevel", "hbs", "lpddr6",
     "npu_hierarchy", "sram_chiplet", "ssd_pcie", "tpu_v5e_hierarchy",
     "Placement", "all_hbs", "capacity_aware", "chiplet_mlp_weights",

@@ -211,14 +211,59 @@ def hbs_interactivity_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
     return out
 
 
+def expected_tokens_per_pass(alpha: float, k: int) -> float:
+    """Expected tokens landed by ONE speculative verify pass with draft
+    length ``k`` and per-position acceptance probability ``alpha``
+    (DESIGN.md SS14).
+
+    The accepted prefix is geometric — position j lands iff all of
+    positions 0..j were accepted — and the correction/bonus token always
+    lands, so E = sum_{j=0..k} alpha^j = (1 - alpha^(k+1)) / (1 - alpha),
+    ranging from 1 (alpha=0: plain decode) to k+1 (alpha=1)."""
+    if k < 0:
+        raise ValueError("k must be >= 0")
+    a = min(max(alpha, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculative_tps(base_tps: float, alpha: float, k: int, *,
+                    overhead_frac: float = 0.0) -> float:
+    """Analytic decode TPS with speculative decoding layered on a plain
+    decode rate of ``base_tps``.
+
+    A verify pass streams weights + KV once — the same traffic a single
+    decode step pays, which is what ``base_tps`` prices — and lands
+    ``expected_tokens_per_pass(alpha, k)`` tokens. ``overhead_frac`` is
+    the extra per-pass cost relative to one plain step (draft compute +
+    the verify window's K extra query rows; ~0 for n-gram drafts on a
+    bandwidth-bound platform)."""
+    e = expected_tokens_per_pass(alpha, k)
+    return base_tps * e / (1.0 + max(overhead_frac, 0.0))
+
+
 def min_hbs_bandwidth_for_itl(grid: Sequence[HBSGridPoint],
-                              itl_target_s: float) -> Dict[float, float]:
+                              itl_target_s: float, *,
+                              tokens_per_pass: float = 1.0,
+                              overhead_frac: float = 0.0
+                              ) -> Dict[float, float]:
     """Per HBS latency, the smallest swept bandwidth whose predicted ITL
     meets the target (the paper's requirement readout); latencies whose
-    entire bandwidth sweep misses the target map to ``inf``."""
+    entire bandwidth sweep misses the target map to ``inf``.
+
+    ``tokens_per_pass`` (> 1 with speculative decoding; see
+    ``expected_tokens_per_pass``) divides the effective ITL: each
+    bandwidth-bound streaming pass emits that many tokens on average, so
+    the SAME interactivity target is met at LOWER HBS bandwidth — the
+    spec-compounded envelope. ``overhead_frac`` prices the per-pass draft
+    + verify-window overhead. Defaults reproduce plain decode."""
+    if tokens_per_pass <= 0:
+        raise ValueError("tokens_per_pass must be > 0")
+    scale = (1.0 + max(overhead_frac, 0.0)) / tokens_per_pass
     best: Dict[float, float] = {}
     for g in grid:
-        if g.itl_s <= itl_target_s:
+        if g.itl_s * scale <= itl_target_s:
             cur = best.get(g.latency_us, float("inf"))
             best[g.latency_us] = min(cur, g.bw_gbps)
         else:

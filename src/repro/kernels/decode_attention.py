@@ -357,6 +357,38 @@ def chunk_prefill_attention(q, k_pages, v_pages, page_table, start, n_valid,
             .reshape(B, C, H, dh))
 
 
+def spec_verify_attention(q, k_pages, v_pages, page_table, seq_lens, n_fed,
+                          *, scale: float = None, k_scale=None, v_scale=None,
+                          interpret: bool = False):
+    """Speculative-verify attention: a K-query block per sequence against
+    the paged KV cache with per-row causal validity (DESIGN.md SS14).
+
+    q: (B, C, H, dh) — the verify window ``[t_last, d_1 .. d_{C-1}]``
+    whose queries sit at per-sequence absolute positions
+    ``seq_lens[b] + j`` (the window's KV — including each draft token's
+    own — is ALREADY scattered into the pages); page_table: (B,
+    n_pages_per_seq); seq_lens: (B,) int32 landed tokens per sequence
+    (the window starts there); n_fed: (B,) real fed window tokens per
+    sequence (<= C — shorter per-slot draft lengths right-pad).
+
+    Row j of sequence b may attend absolute KV positions
+    ``<= seq_lens[b] + min(j, n_fed[b] - 1)`` — the same per-row causal
+    frontier as chunked prefill, with a per-sequence (not scalar) window
+    start. The implementation IS the chunk-prefill kernel: its
+    ``_chunk_kernel`` body already takes a (B,) scalar-prefetch ``start``
+    and computes ``valid = min(start + row + 1, n_valid)`` per row, which
+    is exactly the verify semantics with ``n_valid = seq_lens + n_fed``.
+    This wrapper pins those semantics down as a public entry so the
+    verify path (model layer, ops routing, oracle, tests) does not lean
+    on a prefill implementation detail."""
+    n_valid = (jnp.asarray(seq_lens, jnp.int32)
+               + jnp.asarray(n_fed, jnp.int32))
+    return chunk_prefill_attention(q, k_pages, v_pages, page_table,
+                                   jnp.asarray(seq_lens, jnp.int32), n_valid,
+                                   scale=scale, k_scale=k_scale,
+                                   v_scale=v_scale, interpret=interpret)
+
+
 def quantize_kv(k, v):
     """Per-kv-head symmetric int8 quantization of a KV cache.
 

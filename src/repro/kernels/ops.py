@@ -110,3 +110,26 @@ def try_chunk_prefill_attention(q, k_pages, v_pages, page_table, start,
     return chunk_prefill_attention(q, k_pages, v_pages, page_table, start,
                                    n_valid, scale=scale, k_scale=k_scale,
                                    v_scale=v_scale, interpret=_interpret())
+
+
+def try_spec_verify_attention(q, k_pages, v_pages, page_table, seq_lens,
+                              n_fed, *, scale: float, k_scale=None,
+                              v_scale=None) -> Optional[jax.Array]:
+    """Route to the speculative-verify kernel: a (B, C) query window at
+    per-sequence positions ``seq_lens + j`` with per-row causal validity
+    (DESIGN.md SS14). Same tile eligibility as the chunk kernel it
+    shares its body with."""
+    if not _pallas_ok():
+        return None
+    B, C, H, dh = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    if dh % 128 != 0 and dh not in (64, 128, 256):
+        return None
+    if not _page_tile_ok(page_size, k_pages.dtype):
+        return None
+    if H % Hkv != 0:
+        return None
+    from repro.kernels.decode_attention import spec_verify_attention
+    return spec_verify_attention(q, k_pages, v_pages, page_table, seq_lens,
+                                 n_fed, scale=scale, k_scale=k_scale,
+                                 v_scale=v_scale, interpret=_interpret())

@@ -86,3 +86,18 @@ def chunk_prefill_attention_ref(q, k_pages, v_pages, page_table, start,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgcl,blhd->bchgd", p, vd)
     return o.reshape(B, C, H, dh).astype(q.dtype)
+
+
+def spec_verify_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                              n_fed, *, scale: float, k_scale=None,
+                              v_scale=None):
+    """Oracle for the speculative-verify kernel (DESIGN.md SS14): row j of
+    sequence b attends KV positions <= seq_lens[b] + min(j, n_fed[b]-1)
+    — per-sequence window start, per-row causal frontier, padding rows
+    clipped to the last real row."""
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    n_fed = jnp.asarray(n_fed, jnp.int32)
+    return chunk_prefill_attention_ref(q, k_pages, v_pages, page_table,
+                                       seq_lens, seq_lens + n_fed,
+                                       scale=scale, k_scale=k_scale,
+                                       v_scale=v_scale)

@@ -56,6 +56,31 @@ def main() -> None:
                          "writes are reserved ahead (all-or-nothing). K=1 "
                          "reproduces the per-token loop exactly; any K is "
                          "token-identical (default: 8)")
+    ap.add_argument("--spec-mode", default="off",
+                    choices=["off", "ngram", "model"],
+                    help="speculative decoding on the fused paged path "
+                         "(DESIGN.md SS14): 'ngram' drafts by prompt "
+                         "lookup (model-free), 'model' drafts with a small "
+                         "paged-KV model (--draft-config); requires "
+                         "--scheduler continuous")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per pass (the verify "
+                         "window is K+1 wide; acceptance-adaptive per "
+                         "request)")
+    ap.add_argument("--draft-config",
+                    help="arch name for the --spec-mode model draft "
+                         "(reduced with --d-model/2 when --reduced)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0: greedy). Stochastic "
+                         "sampling runs on device from per-request seeded "
+                         "keys; with spec decoding, leftover/rejection "
+                         "sampling keeps the output distribution exact")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k logit filter (0: off; needs --temperature)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus filter (1.0: off; needs --temperature)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for per-request sampling keys")
     ap.add_argument("--shared-doc", type=int, default=0,
                     help="prepend a shared document of this many tokens to "
                          "every request (exercises prefix dedup)")
@@ -77,6 +102,11 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, d_model=args.d_model)
+    draft_cfg = None
+    if args.draft_config:
+        draft_cfg = get_config(args.draft_config)
+        if args.reduced:
+            draft_cfg = reduced(draft_cfg, d_model=max(args.d_model // 2, 16))
     max_len = args.prompt_len + args.new_tokens + args.shared_doc
     hier = None
     if args.kv_fast_mb is not None:
@@ -94,7 +124,11 @@ def main() -> None:
                       prefix_cache=not args.no_prefix_cache,
                       decode_lookahead=args.decode_lookahead,
                       hierarchy=hier, hbs_gbps=args.hbs_gbps,
-                      hbs_latency_us=args.hbs_us)
+                      hbs_latency_us=args.hbs_us,
+                      spec_mode=args.spec_mode, spec_k=args.spec_k,
+                      draft_cfg=draft_cfg, temperature=args.temperature,
+                      top_k=args.top_k, top_p=args.top_p,
+                      sample_seed=args.seed)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
@@ -138,6 +172,16 @@ def main() -> None:
                   f"prefetch_hit={s.prefetch_hit_rate:.0%} "
                   f"kv_width={eng.kv_dtype_bytes}B "
                   f"peak_kv={peak_mb:.2f}MB (fast {fast_mb:.2f}MB)")
+            if s.stall_by_rid:
+                worst = sorted(s.stall_by_rid.items(),
+                               key=lambda kv_: -kv_[1])[:4]
+                per = " ".join(f"r{r}={v*1e3:.1f}ms" for r, v in worst)
+                print(f"[serve] stall by request (top): {per}")
+        if args.spec_mode != "off":
+            print(f"[serve] spec: mode={args.spec_mode} k={args.spec_k} "
+                  f"blocks={s.spec_blocks} proposed={s.draft_proposed} "
+                  f"accepted={s.draft_accepted} "
+                  f"accept_rate={s.acceptance_rate:.0%}")
     print("[serve] first output:", outs[0][:16])
 
 

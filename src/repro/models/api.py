@@ -54,27 +54,48 @@ def decode_step(cfg, params, token, pos, cache, opts=RuntimeOptions()):
 
 
 def decode_steps(cfg, params, token, pos, cache, n_steps: int,
-                 opts=RuntimeOptions(), *, temperature: float = 0.0):
-    """Fused K-step greedy decode over the dense cache (DESIGN.md SS12).
+                 opts=RuntimeOptions(), *, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0, keys=None):
+    """Fused K-step decode over the dense cache (DESIGN.md SS12).
 
     Scans ``module_for(cfg).decode_step`` ``n_steps`` times with on-device
-    argmax between steps, so the host syncs once per (B, n_steps) token
+    sampling between steps, so the host syncs once per (B, n_steps) token
     block instead of once per token. Family-generic: any ``decode_step``
     with a shape-stable cache pytree scans. token: (B,) int32 last sampled
-    token; pos: scalar int32 write position of that token's KV. Returns
-    ((B, n_steps) token block, new cache)."""
-    from repro.models.lm import sample_greedy
+    token; pos: scalar int32 write position of that token's KV; keys:
+    optional (B, 2) per-slot PRNG keys (required when temperature > 0; the
+    return gains the advanced keys). Returns ((B, n_steps) token block,
+    new cache[, advanced keys])."""
+    from repro.models import sampling
     mod = module_for(cfg)
+    if temperature > 0.0 and keys is None:
+        raise ValueError("stochastic fused decode needs per-slot PRNG keys "
+                         "(keys=(B, 2) uint32)")
+    stochastic = keys is not None and temperature > 0.0
 
     def micro_step(carry, _):
-        tok, p, c = carry
+        tok, p, ks, c = carry
         logits, c = mod.decode_step(cfg, params, tok, p, c, opts)
-        nxt = sample_greedy(logits, temperature)
-        return (nxt, p + 1, c), nxt
+        if stochastic:
+            sub = sampling.split_keys(ks, 2)
+            step_keys, ks = sub[:, 0], sub[:, 1]
+            nxt = sampling.sample(logits, step_keys, temperature=temperature,
+                                  top_k=top_k, top_p=top_p)
+        else:
+            nxt = sampling.sample_greedy(logits)
+        return (nxt, p + 1, ks, c), nxt
 
-    init = (jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32), cache)
-    (_, _, cache), toks = jax.lax.scan(micro_step, init, None, length=n_steps)
-    return jnp.moveaxis(toks, 0, 1), cache
+    B = jnp.shape(token)[0]
+    init_keys = (jnp.asarray(keys, jnp.uint32) if keys is not None
+                 else jnp.zeros((B, 2), jnp.uint32))
+    init = (jnp.asarray(token, jnp.int32), jnp.asarray(pos, jnp.int32),
+            init_keys, cache)
+    (_, _, out_keys, cache), toks = jax.lax.scan(micro_step, init, None,
+                                                 length=n_steps)
+    toks = jnp.moveaxis(toks, 0, 1)
+    if keys is not None:
+        return toks, cache, out_keys
+    return toks, cache
 
 
 # ------------------------- paged KV (continuous batching) -------------- #
@@ -108,11 +129,30 @@ def decode_step_paged(cfg, params, token, seq_lens, page_table, cache,
 def decode_steps_paged(cfg, params, tokens, seq_lens, page_table, cache,
                        n_steps, opts=RuntimeOptions(), *, eos_id=None,
                        pad_id: int = 0, temperature: float = 0.0,
+                       top_k: int = 0, top_p: float = 1.0, keys=None,
                        done=None, quota=None):
     return module_for(cfg).decode_steps_paged(
         cfg, params, tokens, seq_lens, page_table, cache, n_steps, opts,
-        eos_id=eos_id, pad_id=pad_id, temperature=temperature, done=done,
-        quota=quota)
+        eos_id=eos_id, pad_id=pad_id, temperature=temperature, top_k=top_k,
+        top_p=top_p, keys=keys, done=done, quota=quota)
+
+
+def decode_verify_paged(cfg, params, tokens, seq_lens, n_fed, page_table,
+                        cache, opts=RuntimeOptions()):
+    """One paged multi-query verify pass (DESIGN.md SS14)."""
+    return module_for(cfg).decode_verify_paged(cfg, params, tokens, seq_lens,
+                                               n_fed, page_table, cache, opts)
+
+
+def spec_decode_verify(cfg, params, tokens, draft_len, seq_lens, page_table,
+                       cache, keys, opts=RuntimeOptions(), *,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0, pad_id: int = 0):
+    """Verify a draft window + leftover/rejection sampling (DESIGN.md SS14)."""
+    return module_for(cfg).spec_decode_verify(
+        cfg, params, tokens, draft_len, seq_lens, page_table, cache, keys,
+        opts, temperature=temperature, top_k=top_k, top_p=top_p,
+        pad_id=pad_id)
 
 
 def prefill_paged_chunk(cfg, params, tokens, cache, page_table, start,

@@ -24,6 +24,7 @@ from repro.configs.base import ArchConfig
 from repro.models import common as cm
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
+from repro.models import sampling as sampling_mod
 
 
 @dataclass(frozen=True)
@@ -609,9 +610,16 @@ def _paged_chunk_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
     out = None
     if opts.attn_impl == "pallas" and not cfg.logit_softcap:
         from repro.kernels import ops as kops
-        out = kops.try_chunk_prefill_attention(
-            q, kp, vp, page_table, start, n_valid, scale=hd ** -0.5,
-            k_scale=ksc, v_scale=vsc)
+        if jnp.ndim(start) == 1:
+            # per-sequence window start => speculative-verify entry (SS14)
+            out = kops.try_spec_verify_attention(
+                q, kp, vp, page_table, start,
+                n_valid - jnp.asarray(start, jnp.int32), scale=hd ** -0.5,
+                k_scale=ksc, v_scale=vsc)
+        else:
+            out = kops.try_chunk_prefill_attention(
+                q, kp, vp, page_table, start, n_valid, scale=hd ** -0.5,
+                k_scale=ksc, v_scale=vsc)
     if out is None:
         # XLA path: gather the pages densely, causal-mask by position
         kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
@@ -621,9 +629,30 @@ def _paged_chunk_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
             vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
         else:
             kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
-        out = cm.attention(q, kd, vd, mask_kind="causal", q_offset=start,
-                           kv_valid=n_valid, softcap=cfg.logit_softcap,
-                           impl="xla")
+        start_v = jnp.asarray(start, jnp.int32)
+        if start_v.ndim == 0:
+            out = cm.attention(q, kd, vd, mask_kind="causal", q_offset=start,
+                               kv_valid=n_valid, softcap=cfg.logit_softcap,
+                               impl="xla")
+        else:
+            # per-sequence window start (speculative verify, SS14):
+            # cm.attention's q_offset is scalar-only, so build the (B, C, L)
+            # mask explicitly — same numerics as its small path otherwise
+            L = n_pp * ps
+            group = H // Hkv
+            qpos = start_v[:, None] + jnp.arange(C)[None, :]
+            qpos = jnp.minimum(qpos, n_valid[:, None] - 1)   # clip pad rows
+            m = jnp.arange(L)[None, None, :] <= qpos[:, :, None]
+            qg = q.reshape(B, C, Hkv, group, hd)
+            s = jnp.einsum("bshgd,blhd->bshgl", qg, kd,
+                           preferred_element_type=jnp.float32) * (hd ** -0.5)
+            if cfg.logit_softcap:
+                s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+            s = jnp.where(m[:, :, None, None, :], s, cm.NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bshgl,blhd->bshgd", pr.astype(vd.dtype), vd,
+                             preferred_element_type=jnp.float32)
+            out = out.reshape(B, C, H, hd).astype(q.dtype)
     out = cm.dense(p["wo"], out.reshape(B, C, H * hd))
     new_cache = {"k": kp, "v": vp}
     if quant:
@@ -769,28 +798,32 @@ def decode_step_paged(cfg: ArchConfig, params, token, seq_lens, page_table,
 # ------------------------ fused multi-step decode ---------------------- #
 # DESIGN.md SS12: the decode hot loop pays one host round-trip per token
 # when sampling happens on the host. The fused path scans K micro-steps on
-# device — sample (greedy argmax), write KV, advance lengths, latch an EOS/
-# budget done-mask — and hands the host a (B, K) token block per sync.
+# device — sample (greedy or stochastic from carried per-slot keys), write
+# KV, advance lengths, latch an EOS/budget done-mask — and hands the host
+# a (B, K) token block per sync.
 
 
 def sample_greedy(logits, temperature: float = 0.0):
-    """On-device token choice. Greedy argmax matches ``np.argmax`` exactly
-    (both take the first maximum), which is what keeps the fused path
-    token-identical to the host-sampled loop. ``temperature`` is plumbed
-    for a later stochastic path; only 0.0 (greedy) is implemented."""
+    """Back-compat shim over ``repro.models.sampling`` (the real home of
+    on-device token choice since SS14). Greedy argmax matches ``np.argmax``
+    exactly (both take the first maximum), which is what keeps the fused
+    path token-identical to the host-sampled loop. Stochastic sampling
+    needs a per-slot PRNG key — use ``sampling.sample(logits, keys, ...)``
+    (threaded through the fused scan by ``decode_steps_paged(keys=...)``)."""
     if temperature != 0.0:
-        raise NotImplementedError(
-            "fused decode currently samples greedily; temperature sampling "
-            "needs a per-step PRNG key threaded through the scan")
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        raise ValueError(
+            "sample_greedy is greedy-only; stochastic sampling lives in "
+            "repro.models.sampling.sample and needs per-slot PRNG keys")
+    return sampling_mod.sample_greedy(logits)
 
 
 def decode_steps_paged(cfg: ArchConfig, params, tokens, seq_lens, page_table,
                        cache, n_steps: int,
                        opts: RuntimeOptions = RuntimeOptions(), *,
                        eos_id: Optional[int] = None, pad_id: int = 0,
-                       temperature: float = 0.0, done=None, quota=None):
-    """Fused K-step greedy decode over the paged pool (DESIGN.md SS12).
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0, keys=None, done=None, quota=None):
+    """Fused K-step decode over the paged pool (DESIGN.md SS12).
 
     ``jax.lax.scan`` over ``n_steps`` micro-steps: each step writes the
     carried token's KV at its slot's current length, attends, samples the
@@ -808,32 +841,132 @@ def decode_steps_paged(cfg: ArchConfig, params, tokens, seq_lens, page_table,
     done after emitting EOS (``eos_id``) or exhausting its quota; latched
     slots stop advancing lengths and their writes land on the null page.
 
-    With ``n_steps=1`` this is exactly ``decode_step_paged`` + host argmax
-    (the K=1 engine equivalence guarantee). Returns ((B, n_steps) int32
-    token block, new cache)."""
+    Sampling: greedy argmax at ``temperature<=0``; otherwise
+    temperature/top-k/top-p from ``keys`` — (B, 2) uint32 per-slot PRNG
+    keys threaded through the scan carry (each micro-step splits its slot
+    key, consuming one stream element per emitted token, so a request's
+    randomness depends only on its own key lineage, never on batch
+    composition). When ``keys`` is given the return is a 3-tuple
+    ``(tokens, cache, advanced_keys)``; the caller must carry the
+    advanced keys into the next block.
+
+    With ``n_steps=1`` this is exactly ``decode_step_paged`` + host
+    sampling (the K=1 engine equivalence guarantee). Returns ((B, n_steps)
+    int32 token block, new cache[, advanced keys])."""
     B = tokens.shape[0]
+    if temperature > 0.0 and keys is None:
+        raise ValueError("stochastic fused decode needs per-slot PRNG keys "
+                         "(keys=(B, 2) uint32)")
     if done is None:
         done = jnp.zeros((B,), bool)
     if quota is None:
         quota = jnp.full((B,), n_steps, jnp.int32)
     quota = jnp.asarray(quota, jnp.int32)
+    stochastic = keys is not None and temperature > 0.0
 
     def micro_step(carry, _):
-        tok, lens, dn, n_emit, c = carry
+        tok, lens, dn, n_emit, ks, c = carry
         # latched slots write into (and read from) the null page only
         pt = jnp.where(dn[:, None], 0, page_table)
         logits, c = decode_step_paged(cfg, params, tok, lens, pt, c, opts)
-        nxt = jnp.where(dn, jnp.int32(pad_id),
-                        sample_greedy(logits, temperature))
+        if stochastic:
+            sub = sampling_mod.split_keys(ks, 2)          # (B, 2, 2)
+            step_keys, ks = sub[:, 0], sub[:, 1]
+            chosen = sampling_mod.sample(logits, step_keys,
+                                         temperature=temperature,
+                                         top_k=top_k, top_p=top_p)
+        else:
+            chosen = sampling_mod.sample_greedy(logits)
+        nxt = jnp.where(dn, jnp.int32(pad_id), chosen)
         n_emit = n_emit + jnp.where(dn, 0, 1)
         new_dn = dn | (n_emit >= quota)
         if eos_id is not None:
             new_dn = new_dn | (~dn & (nxt == eos_id))
         lens = jnp.where(dn, lens, lens + 1)   # this step's write landed
-        return (nxt, lens, new_dn, n_emit, c), nxt
+        return (nxt, lens, new_dn, n_emit, ks, c), nxt
 
+    init_keys = (jnp.asarray(keys, jnp.uint32) if keys is not None
+                 else jnp.zeros((B, 2), jnp.uint32))
     init = (jnp.asarray(tokens, jnp.int32), jnp.asarray(seq_lens, jnp.int32),
-            done, jnp.zeros((B,), jnp.int32), cache)
-    (_, _, _, _, cache), toks = jax.lax.scan(micro_step, init, None,
-                                             length=n_steps)
-    return jnp.moveaxis(toks, 0, 1), cache
+            done, jnp.zeros((B,), jnp.int32), init_keys, cache)
+    (_, _, _, _, out_keys, cache), toks = jax.lax.scan(micro_step, init, None,
+                                                       length=n_steps)
+    toks = jnp.moveaxis(toks, 0, 1)
+    if keys is not None:
+        return toks, cache, out_keys
+    return toks, cache
+
+
+# ------------------------- speculative decoding ------------------------ #
+# DESIGN.md SS14: a draft (n-gram lookup or a small model) proposes up to
+# K tokens; ONE paged multi-query verify pass scores the whole window
+# against the target model; leftover/rejection sampling keeps the output
+# distribution exactly the target's. Every accepted draft token amortizes
+# a full weight + KV streaming pass — the bandwidth lever the paper's
+# interactivity analysis asks for on constrained platforms.
+
+
+def decode_verify_paged(cfg: ArchConfig, params, tokens, seq_lens, n_fed,
+                        page_table, cache,
+                        opts: RuntimeOptions = RuntimeOptions()):
+    """One paged multi-query pass over a (B, C) token window (SS14).
+
+    tokens: (B, C) window ``[t_last, d_1 .. d_{C-1}]`` per slot —
+    t_last is the last committed token (its KV has NOT landed yet; the
+    pass writes it, exactly like the first micro-step of the fused scan)
+    followed by draft proposals; seq_lens: (B,) tokens whose KV already
+    landed (the window starts there); n_fed: (B,) real window tokens per
+    slot (<= C; shorter drafts right-pad). All C KV positions a slot may
+    write must be page-backed (``reserve_ahead(draft_len + 1)``).
+
+    Logits row j of slot b is the target distribution for the token AFTER
+    window token j — rows 0..n_fed-2 verify the draft, row n_fed-1 is the
+    correction/bonus row. Pad rows write KV beyond the fed window into
+    reserved (or null) pages: never committed, overwritten before any
+    read. Returns (logits (B, C, vocab), new cache)."""
+    B, C = tokens.shape
+    x = _embed_tokens(cfg, params, jnp.asarray(tokens, jnp.int32), None)
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    n_valid = seq_lens + jnp.asarray(n_fed, jnp.int32)
+    positions = seq_lens[:, None] + jnp.arange(C)[None, :]
+
+    def scan_body(carry, xs):
+        lp, cl = xs
+        h = cm.constrain(carry, opts.residual_sharding)
+        a, nc = _paged_chunk_attn(lp["attn"], cm.rms_norm(h, lp["ln1"]),
+                                  cfg, opts, cl, positions, page_table,
+                                  seq_lens, n_valid, calibrate=False)
+        h = h + a
+        f, _ = _ffn_apply(lp, cm.rms_norm(h, lp["ln2"]), cfg, opts)
+        return h + f, nc
+    x, new_stack = jax.lax.scan(scan_body, x, (params["stack"],
+                                               cache["stack"]))
+    logits = _logits(cfg, params, x)
+    return logits, {"stack": new_stack}
+
+
+def spec_decode_verify(cfg: ArchConfig, params, tokens, draft_len, seq_lens,
+                       page_table, cache, keys,
+                       opts: RuntimeOptions = RuntimeOptions(), *,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0, pad_id: int = 0):
+    """Verify a draft window and accept/reject in one device round (SS14).
+
+    tokens: (B, C) fed window ``[t_last, d_1 .. d_{C-1}]``; draft_len:
+    (B,) real proposals per slot (<= C-1; the pass feeds draft_len + 1
+    tokens); keys: (B, 2) per-slot PRNG keys (unused at temperature 0 and
+    returned unchanged there). Emits ``n_acc + 1`` tokens per active slot
+    — accepted draft prefix plus one corrected/bonus token — so progress
+    is always >= 1 token per pass, and at temperature 0 the emitted
+    stream is token-identical to non-speculative greedy decode.
+
+    Returns (out (B, C) int32 [row: accepted drafts, correction, pads],
+    n_acc (B,), advanced keys (B, 2), new cache)."""
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    logits, cache = decode_verify_paged(cfg, params, tokens, seq_lens,
+                                        draft_len + 1, page_table, cache,
+                                        opts)
+    out, n_acc, new_keys = sampling_mod.spec_accept(
+        logits, jnp.asarray(tokens, jnp.int32)[:, 1:], draft_len, keys,
+        temperature=temperature, top_k=top_k, top_p=top_p, pad_id=pad_id)
+    return out, n_acc, new_keys, cache

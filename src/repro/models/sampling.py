@@ -1,0 +1,158 @@
+"""On-device token sampling + speculative accept/reject (DESIGN.md SS14).
+
+The fused decode scan (SS12) and the speculative verify pass both choose
+tokens on device — a host round-trip per token is exactly the
+synchronization overhead the paper's interactivity analysis charges
+against constrained platforms. This module is the single home for that
+choice:
+
+* ``sample_greedy`` — argmax with ``np.argmax`` tie-breaking (first max),
+  the invariant every token-identity test in the repo leans on.
+* ``sample`` — temperature / top-k / top-p sampling from per-slot
+  ``jax.random`` keys (one key row per batch slot, threaded through the
+  ``lax.scan`` carry by ``decode_steps_paged``).
+* ``spec_accept`` — standard leftover/rejection sampling for speculative
+  decoding against *deterministic* draft proposals. Both draft modes
+  (n-gram lookup and greedy small-model) propose a single token per
+  position, i.e. a one-hot draft distribution q: accept draft d with
+  probability p(d) (the clipped ratio min(1, p(d)/q(d)) with q(d)=1), and
+  on rejection sample from the leftover max(0, p - q) ∝ p with d zeroed.
+  This is unbiased for any p, and at temperature 0 it degenerates to
+  "accept iff d == argmax(p)" — which is what makes spec-on output
+  token-identical to greedy spec-off decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sample_greedy(logits):
+    """Greedy argmax over the last axis, int32. Matches ``np.argmax``
+    tie-breaking (first maximum) — the fused-path identity invariant."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def filtered_logits(logits, *, temperature: float, top_k: int = 0,
+                    top_p: float = 1.0):
+    """Temperature-scale then top-k / top-p (nucleus) mask the logits.
+
+    ``top_k``/``top_p`` are STATIC Python values (jit-baked, not traced).
+    top_k <= 0 disables the k filter; top_p >= 1 disables the nucleus
+    filter. The nucleus keeps the smallest prefix of probability-sorted
+    tokens whose cumulative mass reaches ``top_p`` (the token that crosses
+    the threshold is kept). Returns masked logits suitable for
+    ``jax.random.categorical``."""
+    if temperature <= 0.0:
+        raise ValueError("filtered_logits needs temperature > 0; use "
+                         "sample_greedy for temperature 0")
+    s = logits.astype(jnp.float32) / temperature
+    V = s.shape[-1]
+    if top_k and top_k < V:
+        kth = jax.lax.top_k(s, top_k)[0][..., -1:]
+        s = jnp.where(s < kth, NEG_INF, s)
+    if top_p < 1.0:
+        probs = jax.nn.softmax(s, axis=-1)
+        sp = jnp.sort(probs, axis=-1)[..., ::-1]            # descending
+        csum = jnp.cumsum(sp, axis=-1)
+        # mass strictly before each sorted slot; keep while it is < top_p
+        before = csum - sp
+        keep_sorted = before < top_p
+        n_keep = keep_sorted.sum(axis=-1, keepdims=True)    # >= 1 always
+        order = jnp.argsort(-probs, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)                 # rank per token
+        s = jnp.where(ranks < n_keep, s, NEG_INF)
+    return s
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """One token per batch slot. logits: (B, V); key: (B, 2) uint32 —
+    one PRNG key row per slot, so each request's randomness depends only
+    on its own key stream, never on batch composition. temperature <= 0
+    is greedy (key unused)."""
+    if temperature <= 0.0:
+        return sample_greedy(logits)
+    f = filtered_logits(logits, temperature=temperature, top_k=top_k,
+                        top_p=top_p)
+    return jax.vmap(jax.random.categorical)(key, f).astype(jnp.int32)
+
+
+def split_keys(keys, n: int):
+    """Row-wise ``jax.random.split``: (B, 2) -> (B, n, 2)."""
+    return jax.vmap(lambda k: jax.random.split(k, n))(keys)
+
+
+def spec_accept(logits, draft, draft_len, keys, *, temperature: float = 0.0,
+                top_k: int = 0, top_p: float = 1.0, pad_id: int = 0):
+    """Leftover/rejection sampling over one verify pass (DESIGN.md SS14).
+
+    logits: (B, C, V) — row j is the target distribution for the token
+    AFTER feeding window token j, where the fed window is
+    ``[t_last, d_1 .. d_{C-1}]`` (so rows 0..C-2 score the draft tokens
+    and row ``draft_len`` is the correction/bonus distribution).
+    draft: (B, C-1) proposed tokens (col j verifies against row j);
+    draft_len: (B,) valid proposals per slot (<= C-1); keys: (B, 2)
+    uint32 per-slot PRNG keys.
+
+    Accept rule (one-hot draft q): token d_j is accepted with probability
+    p_j(d_j) given every earlier proposal accepted; at temperature 0 this
+    is ``d_j == argmax(p_j)``. The first rejection at position r emits a
+    token from the leftover distribution (p_r with d_r zeroed,
+    renormalized); full acceptance emits a bonus token from row
+    ``draft_len``. Either way exactly ``n_acc + 1`` tokens come out.
+
+    Returns (out (B, C) int32 [accepted drafts, corrected/bonus, pads],
+    n_acc (B,) int32, new_keys (B, 2))."""
+    B, C, V = logits.shape
+    K = C - 1
+    draft = jnp.asarray(draft, jnp.int32)
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    jK = jnp.arange(K)[None, :]                              # (1, K)
+    live = jK < draft_len[:, None]                           # real proposals
+
+    if temperature <= 0.0:
+        tgt = sample_greedy(logits)                          # (B, C)
+        ok = (draft == tgt[:, :K]) & live if K else jnp.zeros((B, 0), bool)
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        corr = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
+        new_keys = keys
+    else:
+        f = filtered_logits(logits, temperature=temperature, top_k=top_k,
+                            top_p=top_p)
+        probs = jax.nn.softmax(f, axis=-1)                   # (B, C, V)
+        sub = split_keys(keys, 3)                            # (B, 3, 2)
+        k_u, k_s, new_keys = sub[:, 0], sub[:, 1], sub[:, 2]
+        if K:
+            u = jax.vmap(lambda k: jax.random.uniform(k, (K,)))(k_u)
+            p_d = jnp.take_along_axis(probs[:, :K], draft[..., None],
+                                      axis=-1)[..., 0]       # (B, K)
+            ok = (u < p_d) & live
+        else:
+            ok = jnp.zeros((B, 0), bool)
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        row_p = jnp.take_along_axis(probs, n_acc[:, None, None],
+                                    axis=1)[:, 0]            # (B, V)
+        rejected = n_acc < draft_len                         # vs full accept
+        if K:
+            d_rej = jnp.take_along_axis(
+                draft, jnp.minimum(n_acc, K - 1)[:, None], axis=1)[:, 0]
+            onehot = jax.nn.one_hot(d_rej, V, dtype=row_p.dtype)
+            leftover = jnp.where(rejected[:, None],
+                                 row_p * (1.0 - onehot), row_p)
+        else:
+            leftover = row_p
+        # categorical is scale-invariant: no renormalization needed
+        lg = jnp.where(leftover > 0, jnp.log(jnp.maximum(leftover, 1e-38)),
+                       NEG_INF)
+        corr = jax.vmap(jax.random.categorical)(k_s, lg).astype(jnp.int32)
+
+    jC = jnp.arange(C)[None, :]                              # (1, C)
+    drafts_padded = jnp.concatenate(
+        [draft, jnp.full((B, 1), pad_id, jnp.int32)], axis=1)
+    out = jnp.where(jC < n_acc[:, None], drafts_padded,
+                    jnp.where(jC == n_acc[:, None], corr[:, None],
+                              jnp.int32(pad_id)))
+    return out.astype(jnp.int32), n_acc.astype(jnp.int32), new_keys

@@ -1,9 +1,12 @@
+from repro.serving.draft import ModelDraft, NGramDraft
 from repro.serving.engine import ServeEngine, ServeStats
 from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
                                       PrefixAllocation, SimulatedTierDevice,
                                       TierBudget, page_bytes)
-from repro.serving.scheduler import ContinuousScheduler, Request
+from repro.serving.scheduler import (AdaptiveSpecK, ContinuousScheduler,
+                                     Request)
 
-__all__ = ["ServeEngine", "ServeStats", "PageAllocationError",
-           "PagedKVManager", "PrefixAllocation", "SimulatedTierDevice",
-           "TierBudget", "page_bytes", "ContinuousScheduler", "Request"]
+__all__ = ["ModelDraft", "NGramDraft", "ServeEngine", "ServeStats",
+           "PageAllocationError", "PagedKVManager", "PrefixAllocation",
+           "SimulatedTierDevice", "TierBudget", "page_bytes", "AdaptiveSpecK",
+           "ContinuousScheduler", "Request"]

@@ -1,0 +1,268 @@
+"""Draft-token proposers for speculative decoding (DESIGN.md SS14).
+
+Two ways to guess the next K tokens cheaply so ONE target verify pass can
+land several of them:
+
+* ``NGramDraft`` — model-free prompt lookup: match the request's trailing
+  n-gram against its own context (prompt + everything emitted so far) and
+  propose the continuation of the latest earlier occurrence. Free on
+  device, and strongest exactly where the paper's constrained-platform
+  story needs it — shared-document QA, where answers restate spans of the
+  prompt and decode loops through predictable continuations.
+* ``ModelDraft`` — a small paged-KV model (e.g. a ``llama32_1b``-class
+  reduction drafting for a larger target) greedily decodes K tokens per
+  request. It owns a SECOND page pool and per-sequence page table over
+  the same paged machinery as the target: chunked prefill to sync a new
+  request, a multi-query catch-up pass to absorb tokens the target
+  committed since the last block, and the fused decode scan to propose.
+  Proposed-token KV is written under an all-or-nothing reservation and
+  rolled back after every propose — the next catch-up re-feeds whatever
+  the target actually accepted, so draft and target KV never disagree.
+
+Both expose ``propose_all(items) -> {rid: [tokens]}`` (items: ``(Request,
+k)`` pairs, k >= 0 the per-request max draft length) and ``drop(rid)``
+for retirement. Proposals are deterministic given the request state —
+the one-hot-draft assumption the leftover/rejection sampler relies on.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (RuntimeOptions, decode_steps_paged,
+                          decode_verify_paged, init_paged_cache, init_params,
+                          paged_supported, prefill_paged_chunk)
+from repro.serving.kv_manager import PageAllocationError, PagedKVManager
+from repro.serving.scheduler import Request
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < max(n, 1):
+        p *= 2
+    return p
+
+
+class NGramDraft:
+    """Prompt-lookup draft: propose the continuation of the latest earlier
+    occurrence of the request's trailing n-gram (longest n first).
+
+    Keeps a per-request incremental index ``{n: {ngram: latest_start}}``
+    over the request's full context, extended only over tokens that
+    arrived since the last call — O(tokens * n_orders) total, never an
+    O(L^2) rescan. Only starts with at least one continuation token are
+    indexed, so a hit always yields a non-empty proposal."""
+
+    def __init__(self, *, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self._idx: Dict[int, Dict[int, Dict[tuple, int]]] = {}
+        self._seen: Dict[int, int] = {}       # rid -> tokens indexed
+
+    def _extend(self, rid: int, toks: List[int]) -> None:
+        idx = self._idx.setdefault(
+            rid, {n: {} for n in range(self.min_ngram, self.max_ngram + 1)})
+        old = self._seen.get(rid, 0)
+        L = len(toks)
+        for n in range(self.min_ngram, self.max_ngram + 1):
+            # new valid starts: s <= L - n - 1 (continuation must exist),
+            # including ones straddling the old/new boundary
+            for s in range(max(0, old - n), L - n):
+                idx[n][tuple(toks[s:s + n])] = s   # later s wins (latest)
+        self._seen[rid] = L
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        toks = req.prefill_tokens
+        self._extend(req.rid, toks)
+        idx = self._idx[req.rid]
+        L = len(toks)
+        # iterated rollout: after taking a continuation, re-match the NEW
+        # trailing n-gram (context + proposal so far) against the index.
+        # A single lookup truncates at the end of context — the latest
+        # occurrence of a decode loop's tail sits right before L, leaving
+        # under a period's worth of continuation — while re-matching
+        # unrolls the cycle out to the full draft length.
+        prop: List[int] = []
+        while len(prop) < k:
+            tail = toks + prop
+            hit = None
+            for n in range(min(self.max_ngram, len(tail)),
+                           self.min_ngram - 1, -1):
+                s = idx[n].get(tuple(tail[len(tail) - n:]))
+                if s is not None:
+                    hit = (s, n)
+                    break
+            if hit is None:
+                break
+            s, n = hit
+            cont = toks[s + n:s + n + k - len(prop)]
+            if not cont:
+                break
+            prop.extend(cont)
+        return prop
+
+    def propose_all(self, items: List[Tuple[Request, int]]
+                    ) -> Dict[int, List[int]]:
+        return {req.rid: self.propose(req, k) for req, k in items}
+
+    def drop(self, rid: int) -> None:
+        self._idx.pop(rid, None)
+        self._seen.pop(rid, None)
+
+
+class ModelDraft:
+    """Small-model draft over a second paged KV pool (DESIGN.md SS14).
+
+    Per block, for each drafted request: (1) *sync* — a new request gets
+    chunked-prefilled up to the target's landed extent; (2) *catch-up* —
+    one batched multi-query pass (``decode_verify_paged``) feeds the
+    tokens the target committed since the last block, writing their draft
+    KV; (3) *propose* — the fused greedy scan decodes up to k tokens
+    under a page reservation that is rolled back immediately (the draft's
+    proposals are speculative even to itself: only what the target
+    accepts ever becomes landed draft KV, via the next catch-up).
+
+    The draft pool is sized for ``max_batch`` full-length sequences. The
+    target engine can hold more *tracked* requests than that (preempted
+    waiters keep their draft KV for free catch-up later), so on pool
+    exhaustion the draft drops sequences not in the current batch and
+    re-syncs them when they next run."""
+
+    def __init__(self, cfg, params=None,
+                 opts: Optional[RuntimeOptions] = None, *, page_size: int,
+                 max_batch: int, max_len: int, seed: int = 1):
+        reason = paged_supported(cfg)
+        if reason:
+            raise ValueError(f"draft config lacks the paged KV path: {reason}")
+        self.cfg = cfg
+        self.opts = opts if opts is not None else RuntimeOptions(
+            dtype="float32")
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed), self.opts)
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.n_pp = -(-max_len // page_size)
+        self.chunk = -(-32 // page_size) * page_size
+        n_pages = 1 + max_batch * self.n_pp
+        self.kv = PagedKVManager(n_pages, page_size)
+        self.cache = init_paged_cache(cfg, n_pages, page_size, self.opts)
+        from functools import partial
+        self._prefill = jax.jit(
+            partial(prefill_paged_chunk, cfg, opts=self.opts),
+            donate_argnums=(2,))
+        self._catchup = jax.jit(
+            partial(decode_verify_paged, cfg, opts=self.opts),
+            donate_argnums=(5,))
+        self._propose = jax.jit(
+            partial(decode_steps_paged, cfg, opts=self.opts, eos_id=None),
+            static_argnames=("n_steps",), donate_argnums=(4,))
+        self._synced: Dict[int, bool] = {}    # rid -> has draft KV
+
+    # ------------------------------------------------------------------ #
+    def _admit(self, req: Request) -> None:
+        """Allocate + chunked-prefill a request's draft KV up to the
+        target's landed extent (= context length - 1; the last token is
+        fed by propose/catch-up, same protocol as the target engine)."""
+        pf = req.prefill_tokens
+        landed = len(pf) - 1
+        padded = -(-max(landed, 1) // self.page_size) * self.page_size
+        try:
+            self.kv.allocate(req.rid, landed, reserve_tokens=padded)
+        except PageAllocationError:
+            # preempted waiters keep draft KV opportunistically; reclaim
+            # theirs before giving up (they re-sync when they next run)
+            for rid in [r for r in self._synced if r != req.rid]:
+                self.drop(rid)
+            self.kv.allocate(req.rid, landed, reserve_tokens=padded)
+        C = self.chunk
+        pt = jnp.asarray(self.kv.table_row(req.rid, self.n_pp)[None])
+        for start in range(0, landed, C):
+            n_real = min(C, landed - start)
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :n_real] = pf[start:start + n_real]
+            _, self.cache = self._prefill(
+                self.params, jnp.asarray(toks), self.cache, pt,
+                jnp.int32(start), jnp.asarray([start + n_real], jnp.int32))
+        self._synced[req.rid] = True
+
+    def propose_all(self, items: List[Tuple[Request, int]]
+                    ) -> Dict[int, List[int]]:
+        if not items:
+            return {}
+        B = self.max_batch
+        assert len(items) <= B, "more drafted requests than draft slots"
+
+        # ---- sync + catch-up bookkeeping (host) ---- #
+        catchup: List[Tuple[int, Request, int, int]] = []  # slot, req, have, m
+        for i, (req, _) in enumerate(items):
+            if req.rid not in self._synced:
+                self._admit(req)
+            have = self.kv.seq_len(req.rid)
+            landed = len(req.prefill_tokens) - 1
+            m = landed - have
+            if m > 0:
+                catchup.append((i, req, have, m))
+
+        # ---- one batched catch-up pass over everyone behind ---- #
+        if catchup:
+            Cc = _next_pow2(max(m for _, _, _, m in catchup))
+            toks = np.zeros((B, Cc), np.int32)
+            lens = np.zeros((B,), np.int32)
+            fed = np.ones((B,), np.int32)     # inactive rows feed 1 pad
+            tables = np.zeros((B, self.n_pp), np.int32)
+            for i, req, have, m in catchup:
+                pf = req.prefill_tokens
+                toks[i, :m] = pf[have:have + m]
+                lens[i] = have
+                fed[i] = m
+                self.kv.reserve_ahead(req.rid, m)
+                tables[i] = self.kv.table_row(req.rid, self.n_pp)
+            _, self.cache = self._catchup(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(fed), jnp.asarray(tables), self.cache)
+            for i, req, have, m in catchup:
+                self.kv.commit_tokens(req.rid, m)
+
+        # ---- batched propose under a rolled-back reservation ---- #
+        ks = [max(0, k) for _, k in items]
+        k_top = max(ks)
+        if k_top == 0:
+            return {req.rid: [] for req, _ in items}
+        tokens = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        tables = np.zeros((B, self.n_pp), np.int32)
+        quota = np.zeros((B,), np.int32)
+        inactive = np.ones((B,), bool)
+        for i, (req, k) in enumerate(items):
+            if k <= 0:
+                continue
+            self.kv.reserve_ahead(req.rid, k)
+            tokens[i] = req.prefill_tokens[-1]
+            lens[i] = self.kv.seq_len(req.rid)
+            tables[i] = self.kv.table_row(req.rid, self.n_pp)
+            quota[i] = k
+            inactive[i] = False
+        n_steps = _next_pow2(k_top)
+        blk, self.cache = self._propose(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(tables), self.cache, n_steps=n_steps,
+            done=jnp.asarray(inactive), quota=jnp.asarray(quota))
+        blk_np = np.asarray(blk)
+        out: Dict[int, List[int]] = {}
+        for i, (req, k) in enumerate(items):
+            out[req.rid] = [int(t) for t in blk_np[i, :k]] if k > 0 else []
+            if k > 0:
+                self.kv.release_reserved(req.rid)   # propose KV rolls back
+        return out
+
+    def drop(self, rid: int) -> None:
+        if self._synced.pop(rid, None):
+            self.kv.free_seq(rid)

@@ -42,11 +42,12 @@ from repro.configs.base import ArchConfig
 from repro.models import (RuntimeOptions, copy_pages, decode_step,
                           decode_steps, decode_steps_paged, init_cache,
                           init_paged_cache, init_params, paged_supported,
-                          prefill, prefill_paged_chunk)
+                          prefill, prefill_paged_chunk, spec_decode_verify)
+from repro.models import sampling
 from repro.serving.kv_manager import (PagedKVManager, SimulatedTierDevice,
                                       TierBudget, page_bytes)
-from repro.serving.scheduler import (PREFILLING, RUNNING, ContinuousScheduler,
-                                     Request)
+from repro.serving.scheduler import (PREFILLING, RUNNING, AdaptiveSpecK,
+                                     ContinuousScheduler, Request)
 
 
 def _next_pow2(n: int) -> int:
@@ -96,6 +97,13 @@ class ServeStats:
     # runtime -> analytic bridge: the landed-page tier split observed at
     # peak occupancy, pin-able into core.concurrency.concurrent_inference
     kv_split_at_peak: tuple = ()
+    # speculative decoding (DESIGN.md SS14)
+    draft_proposed: int = 0             # draft tokens fed to verify passes
+    draft_accepted: int = 0             # draft tokens the target kept
+    spec_blocks: int = 0                # verify passes run
+    # per-request attribution (SS13 deferred item): residency stall charged
+    # to the requests whose pages actually gated each barrier
+    stall_by_rid: Dict[int, float] = field(default_factory=dict)
     # per-request latency samples (seconds)
     ttft: List[float] = field(default_factory=list)
     itl: List[float] = field(default_factory=list)
@@ -104,6 +112,11 @@ class ServeStats:
     def prefetch_hit_rate(self) -> float:
         n = self.prefetch_hits + self.prefetch_misses
         return self.prefetch_hits / n if n else 1.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0)
 
     @property
     def tps(self) -> float:
@@ -142,7 +155,10 @@ class ServeEngine:
                  prefill_budget: Optional[int] = None,
                  prefix_cache: bool = True, decode_lookahead: int = 8,
                  offload: bool = True, hbs_gbps: Optional[float] = None,
-                 hbs_latency_us: Optional[float] = None):
+                 hbs_latency_us: Optional[float] = None,
+                 spec_mode: str = "off", spec_k: int = 4, draft_cfg=None,
+                 draft_params=None, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0, sample_seed: int = 0):
         if kv_policy == "int8":
             import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
@@ -153,6 +169,39 @@ class ServeEngine:
             if reason:
                 raise NotImplementedError(
                     f"continuous scheduler needs the paged KV path: {reason}")
+        # ---- speculative decoding / sampling configuration (SS14) ---- #
+        if spec_mode not in ("off", "ngram", "model"):
+            raise ValueError(f"spec_mode must be one of off|ngram|model, "
+                             f"got {spec_mode!r}")
+        if spec_mode != "off" and scheduler != "continuous":
+            raise ValueError("speculative decoding runs on the paged "
+                             "continuous engine; use scheduler='continuous' "
+                             "or spec_mode='off'")
+        if spec_mode != "off" and spec_k < 1:
+            raise ValueError(f"spec_k ({spec_k}) must be >= 1")
+        if spec_mode == "model" and draft_cfg is None:
+            raise ValueError("spec_mode='model' needs a draft_cfg "
+                             "(a small paged-KV-capable ArchConfig)")
+        if draft_cfg is not None and spec_mode != "model":
+            raise ValueError(f"draft_cfg is only meaningful with "
+                             f"spec_mode='model' (got {spec_mode!r})")
+        if temperature < 0.0:
+            raise ValueError(f"temperature ({temperature}) must be >= 0")
+        if top_k < 0:
+            raise ValueError(f"top_k ({top_k}) must be >= 0")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p ({top_p}) must be in (0, 1]")
+        if temperature == 0.0 and (top_k or top_p < 1.0):
+            raise ValueError("top_k/top_p filter a stochastic sample; they "
+                             "need temperature > 0 (temperature 0 is greedy)")
+        self.spec_mode = spec_mode
+        self.spec_k = spec_k
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
+        self.sample_seed = sample_seed
         self.cfg = cfg
         self.opts = opts
         self.max_len = max_len
@@ -214,8 +263,28 @@ class ServeEngine:
         # fused K-step decode over the paged pool: sample + EOS-latch on
         # device, one host sync per (B, K) token block (DESIGN.md SS12)
         self._decode_fused = jax.jit(
-            partial(decode_steps_paged, cfg, opts=opts, eos_id=eos_id),
+            partial(decode_steps_paged, cfg, opts=opts, eos_id=eos_id,
+                    temperature=temperature, top_k=top_k, top_p=top_p),
             static_argnames=("n_steps",), donate_argnums=(4,))
+        # speculative verify: one paged multi-query pass scores the whole
+        # draft window, leftover/rejection sampling accepts on device (SS14)
+        self._spec_verify = jax.jit(
+            partial(spec_decode_verify, cfg, opts=opts,
+                    temperature=temperature, top_k=top_k, top_p=top_p),
+            donate_argnums=(5,))
+        # per-request sampling keys: fold (rid, tokens-emitted) into the
+        # serve seed, so a request's randomness is independent of batch
+        # composition and survives recompute preemption bit-for-bit
+        _base = jax.random.PRNGKey(sample_seed)
+
+        def _bk(rids, emitted):
+            def one(r, e):
+                return jax.random.fold_in(jax.random.fold_in(_base, r), e)
+            return jax.vmap(one)(rids, emitted)
+        self._block_keys = jax.jit(_bk)
+        self._sample1 = jax.jit(partial(sampling.sample,
+                                        temperature=temperature,
+                                        top_k=top_k, top_p=top_p))
         self._copy_pages = jax.jit(partial(copy_pages, cfg),
                                    donate_argnums=(0,))
         self._chunk_shapes: set = set()   # distinct jitted prefill shapes
@@ -364,6 +433,20 @@ class ServeEngine:
         self.kv_manager = kv
         sched = ContinuousScheduler(kv, B, prefill_chunk=C,
                                     prefill_budget=self.prefill_budget)
+        # draft proposer + acceptance-adaptive window sizing (SS14); fresh
+        # per serve() so lookup indices / draft KV never leak across runs
+        draft = adaptive = None
+        if self.spec_mode == "ngram":
+            from repro.serving.draft import NGramDraft
+            draft = NGramDraft()
+            adaptive = AdaptiveSpecK(self.spec_k)
+        elif self.spec_mode == "model":
+            from repro.serving.draft import ModelDraft
+            draft = ModelDraft(self.draft_cfg, self.draft_params,
+                               page_size=ps, max_batch=B,
+                               max_len=self.max_len)
+            self.draft_params = draft.params    # reuse across serve() calls
+            adaptive = AdaptiveSpecK(self.spec_k)
         cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
         # virtual clock (SS13): wall time plus every simulated migration
@@ -378,6 +461,20 @@ class ServeEngine:
             if s > 0:
                 voffset += s
                 self.stats.stall_s += s
+
+        def stall_barrier(reqs: List[Request], t0: float) -> None:
+            """Fetch-wait barrier with per-request attribution: the batch
+            absorbs the max wait, each request is charged its OWN pages'
+            wait (SS13 deferred item)."""
+            per: Dict[int, float] = {}
+            absorb_stall(kv.residency_stall([r.rid for r in reqs], t0,
+                                            per_seq=per))
+            for r in reqs:
+                v = per.get(r.rid, 0.0)
+                if v > 0:
+                    r.stall_s += v
+                    self.stats.stall_by_rid[r.rid] = (
+                        self.stats.stall_by_rid.get(r.rid, 0.0) + v)
 
         for i, r in enumerate(requests):
             total = len(r) + max_new_tokens
@@ -454,7 +551,7 @@ class ServeEngine:
                     t0 = now()
                     # cached prefix pages may be offload-resident: wait
                     # out their migration before the chunk launches
-                    absorb_stall(kv.residency_stall([req.rid], t0))
+                    stall_barrier([req], t0)
                     logits, cache = self._prefill_chunk(
                         self.params, jnp.asarray(toks), cache,
                         jnp.asarray(pt), jnp.int32(start),
@@ -474,11 +571,22 @@ class ServeEngine:
                                        n_valid=req.n_prefilled)
                     if req.n_prefilled >= F:
                         sched.finish_prefill(slot)
-                        tok = int(np.argmax(
-                            np.asarray(logits[0, F - 1 - start])))
+                        if self.temperature > 0:
+                            # first token of the request: sampled from the
+                            # (rid, 0) key so it is schedule-independent
+                            k1 = self._block_keys(
+                                jnp.asarray([req.rid], jnp.int32),
+                                jnp.zeros((1,), jnp.int32))
+                            tok = int(np.asarray(self._sample1(
+                                logits[:, F - 1 - start], k1))[0])
+                        else:
+                            tok = int(np.argmax(
+                                np.asarray(logits[0, F - 1 - start])))
                         emit(req, tok)
                         if finished(req, tok):
                             sched.retire(slot)
+                            if draft is not None:
+                                draft.drop(req.rid)
 
             running = sched.running()
             note_peak()
@@ -487,72 +595,173 @@ class ServeEngine:
                     continue     # prefills advance / admissions retry
                 break
 
-            # ---- reserve the block's KV writes up front (may preempt) --- #
-            # K lookahead writes per slot, all-or-nothing; LIFO preemption
-            # may evict ANY slot, including a just-admitted PREFILLING one —
-            # diff the full slot table, not just RUNNING
-            K = self.decode_lookahead
-            before = set(sched.slots)
-            for slot, req in running:
-                if slot in sched.slots:     # may have been preempted
-                    sched.reserve_lookahead(slot, min(K, req.remaining))
-            self.stats.preemptions += sum(
-                1 for s in before if s not in sched.slots)
-            running = [(s, r) for s, r in running
-                       if s in sched.slots and r.state == RUNNING]
-            apply_copies()   # COW from reservations lands before the scan
-            note_peak()
+            if self.spec_mode != "off":
+                # ==== speculative decode block (DESIGN.md SS14) ==== #
+                # draft proposes up to k tokens per request; ONE verify
+                # pass streams weights+KV once and lands n_acc+1 tokens
+                t0 = now()
+                items = [(req, min(adaptive.k_for(req), req.remaining - 1))
+                         for _, req in running]
+                props = draft.propose_all(items)
+                # reserve draft_len+1 KV writes per slot, all-or-nothing;
+                # LIFO preemption may evict ANY slot — diff the full table
+                before = set(sched.slots)
+                for slot, req in running:
+                    if slot in sched.slots:
+                        sched.reserve_lookahead(
+                            slot, len(props.get(req.rid, ())) + 1)
+                self.stats.preemptions += sum(
+                    1 for s in before if s not in sched.slots)
+                running = [(s, r) for s, r in running
+                           if s in sched.slots and r.state == RUNNING]
+                apply_copies()
+                note_peak()
+                if not running:
+                    continue
+                # clamp the verify window to the largest live draft,
+                # rounded up to a power of two (O(log K) compiled shapes)
+                max_dl = max(len(props.get(r.rid, ())) for _, r in running)
+                n_tok = min(self.spec_k + 1, _next_pow2(max_dl + 1))
+                tokens = np.zeros((B, n_tok), np.int32)
+                draft_len = np.zeros((B,), np.int32)
+                seq_lens = np.zeros((B,), np.int32)
+                tables = np.zeros((B, n_pp), np.int32)
+                rids = np.zeros((B,), np.int32)
+                emitted = np.zeros((B,), np.int32)
+                for slot, req in running:
+                    pr = list(props.get(req.rid, ()))[:n_tok - 1]
+                    tokens[slot, 0] = req.out[-1]
+                    if pr:
+                        tokens[slot, 1:1 + len(pr)] = pr
+                    draft_len[slot] = len(pr)
+                    seq_lens[slot] = kv.seq_len(req.rid)  # landed extent
+                    tables[slot] = kv.table_row(req.rid, n_pp)
+                    rids[slot] = req.rid
+                    emitted[slot] = len(req.out)
+                keys = self._block_keys(jnp.asarray(rids),
+                                        jnp.asarray(emitted))
+                self._decode_shapes.add(("spec", B, n_tok))
+                stall_barrier([r for _, r in running], now())
+                out, n_acc, _, cache = self._spec_verify(
+                    self.params, jnp.asarray(tokens),
+                    jnp.asarray(draft_len), jnp.asarray(seq_lens),
+                    jnp.asarray(tables), cache, keys)
+                out_np = np.asarray(out)
+                nacc_np = np.asarray(n_acc)
+                dt = now() - t0
+                self.stats.host_syncs += 1
+                self.stats.decode_s += dt
+                self.stats.decode_steps += 1    # one streaming pass
+                self.stats.spec_blocks += 1
 
-            # ---- one fused K-step decode block over the RUNNING slots --- #
-            # sampling, EOS latching, and length advance happen on device;
-            # the host syncs once per (B, K) token block (DESIGN.md SS12)
-            tokens = np.zeros((B,), np.int32)
-            seq_lens = np.zeros((B,), np.int32)
-            tables = np.zeros((B, n_pp), np.int32)
-            quota = np.zeros((B,), np.int32)
-            inactive = np.ones((B,), bool)
-            for slot, req in running:
-                tokens[slot] = req.out[-1]
-                seq_lens[slot] = kv.seq_len(req.rid)      # write position
-                tables[slot] = kv.table_row(req.rid, n_pp)
-                quota[slot] = min(K, req.remaining)
-                inactive[slot] = False
-            # clamp the block to the largest live quota, rounded up to a
-            # power of two: a tail block (everyone nearly done) runs short
-            # instead of decoding K wasted pad steps, at O(log K) shapes
-            n_steps = min(K, _next_pow2(int(quota.max())))
-            self._decode_shapes.add(("paged", B, n_steps))
-            t0 = now()
-            # fetch-wait barrier (SS13): every page this block attends over
-            # must be fast-resident — or its streamed read landed — before
-            # the kernel launches; a block that outruns its prefetch
-            # absorbs the residual as recorded stall, never a silent win
-            absorb_stall(kv.residency_stall([r.rid for _, r in running], t0))
-            blk, cache = self._decode_fused(
-                self.params, jnp.asarray(tokens), jnp.asarray(seq_lens),
-                jnp.asarray(tables), cache, n_steps=n_steps,
-                done=jnp.asarray(inactive), quota=jnp.asarray(quota))
-            blk_np = np.asarray(blk)
-            dt = now() - t0
-            self.stats.host_syncs += 1
-            self.stats.decode_s += dt
-            self.stats.decode_steps += n_steps
+                # distribute: accepted prefix + correction/bonus token; the
+                # pass wall time is attributed evenly over ACCEPTED tokens
+                # (the whole point: ITL shrinks with acceptance); rejected
+                # suffix pages roll back via commit_speculative
+                for slot, req in running:
+                    dl = int(draft_len[slot])
+                    acc = int(nacc_np[slot])
+                    self.stats.draft_proposed += dl
+                    self.stats.draft_accepted += acc
+                    req.draft_proposed += dl
+                    req.draft_accepted += acc
+                    adaptive.update(req, dl, acc)
+                    m = acc + 1
+                    fin = False
+                    n_written = 0
+                    for j in range(m):
+                        tok = int(out_np[slot, j])
+                        n_written += 1
+                        emit(req, tok, at=t0 + dt * (j + 1) / m)
+                        if finished(req, tok):
+                            fin = True
+                            break
+                    kv.commit_speculative(req.rid, n_written)
+                    if fin:
+                        sched.retire(slot)
+                        draft.drop(req.rid)
+            else:
+                # ---- reserve the block's KV writes up front (may
+                # preempt): K lookahead writes per slot, all-or-nothing;
+                # LIFO preemption may evict ANY slot, including a
+                # just-admitted PREFILLING one — diff the full slot table
+                K = self.decode_lookahead
+                before = set(sched.slots)
+                for slot, req in running:
+                    if slot in sched.slots:     # may have been preempted
+                        sched.reserve_lookahead(slot, min(K, req.remaining))
+                self.stats.preemptions += sum(
+                    1 for s in before if s not in sched.slots)
+                running = [(s, r) for s, r in running
+                           if s in sched.slots and r.state == RUNNING]
+                apply_copies()   # COW from reservations lands pre-scan
+                note_peak()
 
-            # distribute the block: per-token ITL is attributed evenly from
-            # the block wall time; retire/commit happen at block boundaries
-            for slot, req in running:
-                fin = False
-                n_written = 0                # device-side KV writes taken
-                for j in range(int(quota[slot])):
-                    tok = int(blk_np[slot, j])
-                    n_written += 1
-                    emit(req, tok, at=t0 + dt * (j + 1) / n_steps)
-                    if finished(req, tok):
-                        fin = True
-                        break
-                kv.commit_tokens(req.rid, n_written)
-                if fin:
-                    sched.retire(slot)       # frees surplus reserved pages
+                # ---- one fused K-step decode block over RUNNING slots:
+                # sampling, EOS latching, and length advance happen on
+                # device; one host sync per (B, K) block (DESIGN.md SS12)
+                tokens = np.zeros((B,), np.int32)
+                seq_lens = np.zeros((B,), np.int32)
+                tables = np.zeros((B, n_pp), np.int32)
+                quota = np.zeros((B,), np.int32)
+                inactive = np.ones((B,), bool)
+                for slot, req in running:
+                    tokens[slot] = req.out[-1]
+                    seq_lens[slot] = kv.seq_len(req.rid)  # write position
+                    tables[slot] = kv.table_row(req.rid, n_pp)
+                    quota[slot] = min(K, req.remaining)
+                    inactive[slot] = False
+                # clamp the block to the largest live quota, rounded up to
+                # a power of two: a tail block (everyone nearly done) runs
+                # short instead of decoding K wasted pad steps
+                n_steps = min(K, _next_pow2(int(quota.max())))
+                self._decode_shapes.add(("paged", B, n_steps))
+                t0 = now()
+                # fetch-wait barrier (SS13): every page this block attends
+                # over must be fast-resident — or its streamed read landed
+                # — before the kernel launches; a block that outruns its
+                # prefetch absorbs the residual as recorded stall
+                stall_barrier([r for _, r in running], t0)
+                if self.temperature > 0:
+                    rids = np.zeros((B,), np.int32)
+                    emitted = np.zeros((B,), np.int32)
+                    for slot, req in running:
+                        rids[slot] = req.rid
+                        emitted[slot] = len(req.out)
+                    keys = self._block_keys(jnp.asarray(rids),
+                                            jnp.asarray(emitted))
+                    blk, cache, _ = self._decode_fused(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(seq_lens), jnp.asarray(tables), cache,
+                        n_steps=n_steps, keys=keys,
+                        done=jnp.asarray(inactive), quota=jnp.asarray(quota))
+                else:
+                    blk, cache = self._decode_fused(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(seq_lens), jnp.asarray(tables), cache,
+                        n_steps=n_steps, done=jnp.asarray(inactive),
+                        quota=jnp.asarray(quota))
+                blk_np = np.asarray(blk)
+                dt = now() - t0
+                self.stats.host_syncs += 1
+                self.stats.decode_s += dt
+                self.stats.decode_steps += n_steps
+
+                # distribute the block: per-token ITL is attributed evenly
+                # from the block wall time; retire/commit at boundaries
+                for slot, req in running:
+                    fin = False
+                    n_written = 0            # device-side KV writes taken
+                    for j in range(int(quota[slot])):
+                        tok = int(blk_np[slot, j])
+                        n_written += 1
+                        emit(req, tok, at=t0 + dt * (j + 1) / n_steps)
+                        if finished(req, tok):
+                            fin = True
+                            break
+                    kv.commit_tokens(req.rid, n_written)
+                    if fin:
+                        sched.retire(slot)   # frees surplus reserved pages
 
             # prefetch AHEAD of the next block, backdated to this block's
             # launch: the next block reads the same sequences' pages, so

@@ -521,13 +521,28 @@ class PagedKVManager:
         ready, _ = self._ensure_fast(seq_ids, now)
         return ready
 
-    def residency_stall(self, seq_ids: Sequence[int], now: float) -> float:
+    def residency_stall(self, seq_ids: Sequence[int], now: float, *,
+                        per_seq: Optional[Dict[int, float]] = None) -> float:
         """Fetch-wait barrier before a kernel launch: demand-fetches any
         page still offload-resident (a prefetch miss) and returns the
         stall the kernel must absorb until every page's migration
         completes. Consumes the prefetch hit/miss accounting: a fetched
-        page whose migration finished by ``now`` is a hit."""
+        page whose migration finished by ``now`` is a hit.
+
+        ``per_seq`` (optional out-param) receives each sequence's OWN
+        stall — the wait until just ITS pages are resident. The batch
+        barrier is the max over sequences, so per-seq attribution shows
+        which request's working set actually gated the block (SS13
+        deferred item: per-request stall accounting)."""
         ready, _ = self._ensure_fast(seq_ids, now)
+        if per_seq is not None:
+            for sid in seq_ids:
+                own = now
+                for p in self._seqs[sid].pages:
+                    t = self._ready_at.get(p)
+                    if t is not None and t > own:
+                        own = t
+                per_seq[sid] = per_seq.get(sid, 0.0) + max(0.0, own - now)
         for sid in seq_ids:
             for p in self._seqs[sid].pages:
                 if p not in self._fetch_pending:
@@ -729,6 +744,23 @@ class PagedKVManager:
                 f"reserved pages (reserve_ahead first)")
         s.n_tokens += n
         s.n_written = s.n_tokens
+
+    def commit_speculative(self, seq_id: int, n_accepted: int) -> int:
+        """Partial rollback after a speculative verify pass (DESIGN.md
+        SS14): the pass reserved ``draft_len + 1`` positions and wrote KV
+        for every fed token, but only ``n_accepted`` of them (accepted
+        draft prefix + the corrected/bonus token) survive. Commit those
+        and return every reserved page past the new landed extent to the
+        pool — the rejected suffix's KV stays as garbage inside still-
+        owned pages (overwritten by the next pass before any read) or on
+        released pages (reclaimable immediately).
+
+        Returns the number of pages rolled back. Equivalent to
+        ``commit_tokens(n_accepted)`` + ``release_reserved()``; a single
+        entry point so the invariant "landed extent == emitted tokens"
+        cannot be split across a preemption window."""
+        self.commit_tokens(seq_id, n_accepted)
+        return self.release_reserved(seq_id)
 
     def mark_written(self, seq_id: int, n: int) -> None:
         """Set the landed-KV extent to ``n`` tokens (clamped to the

@@ -56,6 +56,11 @@ class Request:
     n_prefilled: int = 0       # prompt tokens whose KV is cached (chunked)
     t_submit: float = 0.0      # engine timestamps (TTFT / inter-token)
     t_last: float = 0.0
+    stall_s: float = 0.0       # HBS residency stall attributed to THIS
+                               # request's pages (SS13/SS14)
+    draft_proposed: int = 0    # speculative decoding counters (SS14)
+    draft_accepted: int = 0
+    accept_ema: float = 1.0    # EMA of per-verify-pass acceptance rate
 
     @property
     def prefill_tokens(self) -> List[int]:
@@ -65,6 +70,37 @@ class Request:
     @property
     def remaining(self) -> int:
         return self.max_new_tokens - len(self.out)
+
+
+class AdaptiveSpecK:
+    """Acceptance-rate-adaptive draft length (DESIGN.md SS14).
+
+    Each verify pass costs one full weight + KV streaming round whatever
+    K is, but rejected draft positions waste verify-window compute and
+    reserved pages. Track a per-request EMA of the acceptance *rate*
+    (accepted / proposed per pass) and size the next window as
+    ``clamp(round(ema * k_max), k_min, k_max)`` — a request whose context
+    predicts well (shared-document QA) keeps the full window, one that
+    keeps rejecting shrinks toward ``k_min`` and degrades gracefully to
+    near-plain decode."""
+
+    def __init__(self, k_max: int, *, k_min: int = 1, beta: float = 0.5):
+        if k_max < 1:
+            raise ValueError("k_max must be >= 1")
+        self.k_max = k_max
+        self.k_min = max(1, min(k_min, k_max))
+        self.beta = beta
+
+    def k_for(self, req: Request) -> int:
+        k = int(round(req.accept_ema * self.k_max))
+        return max(self.k_min, min(self.k_max, k))
+
+    def update(self, req: Request, proposed: int, accepted: int) -> None:
+        if proposed <= 0:
+            return
+        rate = accepted / proposed
+        req.accept_ema = ((1.0 - self.beta) * req.accept_ema
+                          + self.beta * rate)
 
 
 class ContinuousScheduler:

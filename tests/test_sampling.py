@@ -1,0 +1,127 @@
+"""On-device sampling (DESIGN.md SS14): greedy argmax parity, logit
+filtering (temperature / top-k / top-p), keyed categorical sampling, and
+the temperature -> 0 convergence guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import sampling
+
+
+def test_greedy_matches_np_argmax_tie_breaking():
+    """Acceptance: ``sample_greedy`` reproduces np.argmax exactly —
+    including ties, which both break toward the LOWEST index — so the
+    fused on-device path stays token-identical to the old host loop."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(16, 33)).astype(np.float32)
+    # manufacture ties at assorted positions, incl. the first column
+    logits[0, :] = 0.5
+    logits[1, [3, 17]] = logits[1].max() + 1.0
+    logits[2, [0, 32]] = logits[2].max() + 1.0
+    got = np.asarray(sampling.sample_greedy(jnp.asarray(logits)))
+    want = np.argmax(logits, axis=-1)
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+
+
+def test_sample_temperature_zero_is_greedy():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(4, 50)).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    got = sampling.sample(logits, keys, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(sampling.sample_greedy(logits)))
+
+
+def test_sample_converges_to_greedy_as_temperature_vanishes():
+    """temp -> 0+ sharpens the categorical onto the argmax: at 1e-4 every
+    draw must equal greedy (distinct maxima, so no tie ambiguity)."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(8, 40)).astype(np.float32))
+    want = np.asarray(sampling.sample_greedy(logits))
+    for seed in range(5):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+        got = np.asarray(sampling.sample(logits, keys, temperature=1e-4))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_filtered_logits_rejects_nonpositive_temperature():
+    logits = jnp.zeros((1, 4))
+    with pytest.raises(ValueError):
+        sampling.filtered_logits(logits, temperature=0.0)
+    with pytest.raises(ValueError):
+        sampling.filtered_logits(logits, temperature=-1.0)
+
+
+def test_filtered_logits_top_k_keeps_exactly_k():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(5, 64)).astype(np.float32))
+    for k in (1, 3, 10):
+        out = np.asarray(sampling.filtered_logits(logits, temperature=1.0,
+                                                  top_k=k))
+        kept = out > sampling.NEG_INF / 2
+        assert (kept.sum(axis=-1) == k).all()
+        # the kept set IS the top-k set
+        for b in range(5):
+            top = set(np.argsort(np.asarray(logits[b]))[-k:])
+            assert set(np.flatnonzero(kept[b])) == top
+
+
+def test_filtered_logits_top_p_nucleus_property():
+    """The kept set is the minimal probability-sorted prefix whose mass
+    reaches top_p: every kept token's 'mass before me' is < top_p, and
+    the total kept mass is >= top_p."""
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(size=(6, 32)).astype(np.float32) * 2)
+    for p in (0.1, 0.5, 0.9):
+        out = np.asarray(sampling.filtered_logits(logits, temperature=1.0,
+                                                  top_p=p))
+        kept = out > sampling.NEG_INF / 2
+        probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+        for b in range(6):
+            order = np.argsort(-probs[b])
+            csum = np.cumsum(probs[b][order])
+            mass_before = csum - probs[b][order]
+            want = set(order[mass_before < p])
+            assert set(np.flatnonzero(kept[b])) == want
+            assert probs[b][kept[b]].sum() >= p - 1e-6
+        # the argmax always survives the nucleus
+        assert kept[np.arange(6), probs.argmax(-1)].all()
+
+
+def test_filtered_logits_temperature_scales():
+    logits = jnp.asarray([[2.0, 0.0, -2.0]])
+    out = np.asarray(sampling.filtered_logits(logits, temperature=0.5))
+    np.testing.assert_allclose(out, [[4.0, 0.0, -4.0]], atol=1e-6)
+
+
+def test_sample_is_deterministic_per_key_and_unbiased():
+    """Same key -> same token; across many keys the empirical histogram
+    tracks softmax(logits / T) (loose TV bound)."""
+    logits_row = np.asarray([1.5, 0.0, -0.5, 2.0, -3.0], np.float32)
+    N = 4000
+    logits = jnp.asarray(np.tile(logits_row, (N, 1)))
+    keys = jax.random.split(jax.random.PRNGKey(7), N)
+    got = np.asarray(sampling.sample(logits, keys, temperature=1.0))
+    again = np.asarray(sampling.sample(logits, keys, temperature=1.0))
+    np.testing.assert_array_equal(got, again)
+    want = np.asarray(jax.nn.softmax(jnp.asarray(logits_row)))
+    emp = np.bincount(got, minlength=5) / N
+    assert 0.5 * np.abs(emp - want).sum() < 0.05
+
+
+def test_split_keys_shapes_and_divergence():
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    sub = sampling.split_keys(keys, 2)
+    assert sub.shape == (3, 2, 2)
+    flat = np.asarray(sub).reshape(-1, 2)
+    assert len({tuple(r) for r in flat}) == 6   # all children distinct
+
+
+def test_sample_greedy_shim_rejects_nonzero_temperature():
+    from repro.models.lm import sample_greedy
+    logits = jnp.zeros((1, 4))
+    with pytest.raises(ValueError):
+        sample_greedy(logits, temperature=0.5)
+    np.testing.assert_array_equal(np.asarray(sample_greedy(logits)), [0])
