@@ -1,10 +1,85 @@
-"""Shared benchmark plumbing: timing + ``name,us_per_call,derived`` CSV."""
+"""Shared benchmark plumbing: timing + ``name,us_per_call,derived`` CSV,
+and the one merge-and-validate writer every serving benchmark uses for
+``BENCH_serve.json`` (DESIGN.md SS15)."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# ``BENCH_serve.json`` schema: every serving benchmark owns exactly one
+# top-level section and must provide at least these keys in it. Keeping
+# the whole file section-keyed is what makes the merge safe — a run of
+# one benchmark can never clobber another's results.
+BENCH_SECTIONS: Dict[str, Tuple[str, ...]] = {
+    "serve_bench": ("workload", "baseline_no_sharing", "prefix_sharing",
+                    "derived"),
+    "hbs_sweep": ("analytic_13b", "measured_reduced"),
+    "spec_sweep": ("workload", "ngram", "spec_x_hbs"),
+}
+
+
+def merge_bench_json(path: str, section: str, payload: dict) -> dict:
+    """Merge one benchmark's ``payload`` into ``path`` under its section
+    key, preserving every other benchmark's section, and validate the
+    merged document against ``BENCH_SECTIONS`` before writing (atomic
+    tmp + rename). Returns the merged document.
+
+    Raises ``ValueError`` on an unknown section, a payload missing its
+    required keys, a corrupt/non-object existing file, or an existing
+    file with non-section top-level keys (the pre-SS15 layout, where
+    ``serve_bench`` wrote its results at top level — regenerate it)."""
+    if section not in BENCH_SECTIONS:
+        raise ValueError(f"unknown BENCH_serve section {section!r}; "
+                         f"known: {sorted(BENCH_SECTIONS)}")
+    merged: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path} is not valid JSON ({e}); delete it "
+                             f"and re-run the benchmarks") from e
+        if not isinstance(merged, dict):
+            raise ValueError(f"{path} must hold a JSON object, found "
+                             f"{type(merged).__name__}")
+        legacy = sorted(k for k in merged if k not in BENCH_SECTIONS)
+        if legacy:
+            raise ValueError(
+                f"{path} has non-section top-level keys {legacy} — the "
+                f"pre-sectioned layout (or a foreign file). Delete it and "
+                f"re-run the benchmarks to regenerate the sectioned form.")
+    merged[section] = payload
+    for sec, required in BENCH_SECTIONS.items():
+        if sec not in merged:
+            continue
+        if not isinstance(merged[sec], dict):
+            raise ValueError(f"section {sec!r} must be an object")
+        missing = [k for k in required if k not in merged[sec]]
+        if missing:
+            raise ValueError(f"section {sec!r} is missing required keys "
+                             f"{missing}")
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    return merged
+
+
+def goodput_summary(report: dict) -> dict:
+    """Compact per-cell form of ``TraceRecorder.slo_report`` for sweep
+    grids: goodput + how many violators each phase is blamed for."""
+    blame: Dict[str, int] = {}
+    for v in report["violators"]:
+        blame[v["blame"]] = blame.get(v["blame"], 0) + 1
+    return {"goodput_frac": report["goodput_frac"],
+            "n_met_slo": report["n_met_slo"],
+            "n_requests": report["n_requests"],
+            "violator_blame": blame}
 
 
 def bench(name: str, fn: Callable[[], object], *, repeat: int = 1) -> object:

@@ -32,12 +32,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.reduce import reduced
+
+try:
+    from benchmarks.common import goodput_summary, merge_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from common import goodput_summary, merge_bench_json
 
 # generous-bandwidth grid point: transfers complete in sub-µs virtual
 # time, so recorded stall must round to zero and prefetch always wins
@@ -167,12 +171,17 @@ def measured_section(args) -> dict:
             eng.stats.__init__()
             outs = eng.serve([r[:] for r in reqs], args.new_tokens)
             s = eng.stats
+            slo = eng.trace.slo_report(args.slo_ttft_ms * 1e-3,
+                                       args.slo_itl_ms * 1e-3)
             cells.append({
                 "bw_gbps": bw, "latency_us": lat,
                 "tps": round(s.tps, 2),
                 "itl_p50_ms": round(s.itl_p50 * 1e3, 3),
                 "itl_p95_ms": round(s.itl_p95 * 1e3, 3),
                 "stall_ms": round(s.stall_s * 1e3, 3),
+                "stall_by_rid_ms": {
+                    str(rid): round(v * 1e3, 3)
+                    for rid, v in sorted(s.stall_by_rid.items())},
                 "spill_mb": round(s.spill_bytes / 1e6, 3),
                 "fetch_mb": round(s.fetch_bytes / 1e6, 3),
                 "prefetch_hit_rate": round(s.prefetch_hit_rate, 3),
@@ -181,6 +190,10 @@ def measured_section(args) -> dict:
                 "token_identical": outs == want,
                 "kv_split_at_peak": [[t, round(f, 4)]
                                      for t, f in s.kv_split_at_peak],
+                # trace-derived (SS15): where each cell's time went, and
+                # goodput vs the SLO targets with per-phase blame
+                "breakdown_ms": eng.trace.aggregate_breakdown_ms(),
+                "goodput": goodput_summary(slo),
             })
 
     generous = [c for c in cells if c["bw_gbps"] == GENEROUS_GBPS][0]
@@ -201,8 +214,11 @@ def measured_section(args) -> dict:
         "arch": cfg.name, "n_requests": len(reqs),
         "prompt_len": args.prompt_len, "new_tokens": args.new_tokens,
         "fast_pages": fast_pages, "page_kb": round(pb / 1e3, 2),
+        "slo_ttft_ms": args.slo_ttft_ms, "slo_itl_ms": args.slo_itl_ms,
         "grid": cells,
         "derived": {
+            "goodput_generous": generous["goodput"]["goodput_frac"],
+            "goodput_stingiest": stingiest["goodput"]["goodput_frac"],
             "generous_token_identical": generous["token_identical"],
             "generous_stall_ms": generous["stall_ms"],
             "all_token_identical": all(c["token_identical"] for c in cells),
@@ -238,19 +254,18 @@ def main() -> None:
                          "measures the real rate)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft length for the spec-compounded envelope")
+    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="TTFT target for the per-cell goodput report")
+    ap.add_argument("--slo-itl-ms", type=float, default=100.0,
+                    help="per-request p95 ITL target for the per-cell "
+                         "goodput report")
     args = ap.parse_args()
 
     results = {"analytic_13b": analytic_section(args),
                "measured_reduced": measured_section(args)}
     print(json.dumps(results, indent=2))
     if args.json:
-        merged = {}
-        if os.path.exists(args.json):
-            with open(args.json) as f:
-                merged = json.load(f)
-        merged["hbs_sweep"] = results
-        with open(args.json, "w") as f:
-            json.dump(merged, f, indent=2)
+        merge_bench_json(args.json, "hbs_sweep", results)
         print(f"[hbs_sweep] merged into {args.json}")
 
 

@@ -20,22 +20,32 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.reduce import reduced
 from repro.models import RuntimeOptions, init_params
+from repro.serving.metrics import pct_ms
+
+try:
+    from benchmarks.common import merge_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from common import merge_bench_json
 
 
-def run_workload(eng, reqs, new_tokens: int) -> tuple:
+def run_workload(eng, reqs, new_tokens: int, *,
+                 slo_ttft_s=None, slo_itl_s=None) -> tuple:
     """Returns (outputs of the timed pass, metrics dict) — greedy decode
     is deterministic, so callers reuse the outputs instead of
-    re-serving."""
+    re-serving. The metrics fold in the run's trace exports (SS15):
+    aggregate phase breakdown, SLO goodput, per-request stall
+    attribution, and the spec acceptance stats."""
     eng.serve([r[:] for r in reqs], new_tokens)   # warm the jit caches
     eng.stats.__init__()
     outs = eng.serve([r[:] for r in reqs], new_tokens)
     s = eng.stats
+    tr = eng.trace
     return outs, {
         "tps": round(s.tps, 2),
-        "ttft_p50_ms": round(s.ttft_p50 * 1e3, 3),
-        "ttft_p95_ms": round(s.ttft_p95 * 1e3, 3),
-        "itl_p50_ms": round(s.itl_p50 * 1e3, 3),
-        "itl_p95_ms": round(s.itl_p95 * 1e3, 3),
+        "ttft_p50_ms": pct_ms(s.ttft, 50),
+        "ttft_p95_ms": pct_ms(s.ttft, 95),
+        "itl_p50_ms": pct_ms(s.itl, 50),
+        "itl_p95_ms": pct_ms(s.itl, 95),
         "prefill_tokens_computed": s.prefill_tokens_computed,
         "cached_prefix_tokens": s.cached_prefix_tokens,
         "pages_deduped": s.pages_deduped,
@@ -46,6 +56,22 @@ def run_workload(eng, reqs, new_tokens: int) -> tuple:
         "preemptions": s.preemptions,
         "decode_steps": s.decode_steps,
         "host_syncs": s.host_syncs,
+        # per-request attribution (SS15): residency stall by request id
+        # and the draft acceptance counters, straight from ServeStats
+        "stall_ms": round(s.stall_s * 1e3, 3),
+        "stall_by_rid_ms": {str(rid): round(v * 1e3, 3)
+                            for rid, v in sorted(s.stall_by_rid.items())},
+        "spec": {
+            "acceptance_rate": round(s.acceptance_rate, 3),
+            "draft_proposed": s.draft_proposed,
+            "draft_accepted": s.draft_accepted,
+            "spec_blocks": s.spec_blocks,
+        },
+        # trace-derived sections (audited against the stats by reconcile)
+        "breakdown_ms": tr.aggregate_breakdown_ms(),
+        "goodput": tr.slo_report(slo_ttft_s, slo_itl_s),
+        "trace_reconciled": bool(eng.trace_report
+                                 and eng.trace_report["ok"]),
     }
 
 
@@ -56,13 +82,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
-                    default=None, help="write results to this JSON file")
+                    default=None,
+                    help="merge results into this JSON file under the "
+                         "'serve_bench' key")
     ap.add_argument("--doc-len", type=int, default=48)
     ap.add_argument("--n-requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--lookahead", default="1,4,8,16",
                     help="comma-separated decode-lookahead K values to "
                          "sweep (fused multi-step decode)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the prefix-sharing run's Chrome trace-"
+                         "event JSON here (perfetto-loadable; the CI "
+                         "artifact)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="TTFT target for the goodput report (reduced "
+                         "CPU model: generous by default)")
+    ap.add_argument("--slo-itl-ms", type=float, default=100.0,
+                    help="per-request p95 ITL target for the goodput "
+                         "report")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch), d_model=128, n_layers=4, vocab=512)
@@ -74,16 +112,23 @@ def main() -> None:
             for _ in range(args.n_requests)]
     max_len = args.doc_len + 8 + args.new_tokens + 16
 
+    slo = dict(slo_ttft_s=args.slo_ttft_ms * 1e-3,
+               slo_itl_s=args.slo_itl_ms * 1e-3)
     results = {"workload": {
         "arch": args.arch, "doc_len": args.doc_len,
         "n_requests": args.n_requests, "question_len": 8,
-        "new_tokens": args.new_tokens}}
+        "new_tokens": args.new_tokens,
+        "slo_ttft_ms": args.slo_ttft_ms, "slo_itl_ms": args.slo_itl_ms}}
     outs = {}
     for key, pc in (("baseline_no_sharing", False), ("prefix_sharing", True)):
         eng = ServeEngine(cfg, params, opts, max_len=max_len,
                           scheduler="continuous", page_size=16, max_batch=8,
                           prefix_cache=pc)
-        outs[pc], results[key] = run_workload(eng, reqs, args.new_tokens)
+        outs[pc], results[key] = run_workload(eng, reqs, args.new_tokens,
+                                              **slo)
+        if pc and args.trace_out:
+            eng.trace.save(args.trace_out)
+            print(f"[serve_bench] wrote trace {args.trace_out}")
 
     base, shared = results["baseline_no_sharing"], results["prefix_sharing"]
     results["derived"] = {
@@ -111,7 +156,7 @@ def main() -> None:
                           prefix_cache=True, decode_lookahead=k,
                           prefill_budget=budget)
         k_outs[k], sweep[str(k)] = run_workload(eng, d_reqs,
-                                                args.new_tokens)
+                                                args.new_tokens, **slo)
     results["lookahead_sweep"] = sweep
     if 1 in ks and 8 in ks:
         k1, k8 = sweep["1"], sweep["8"]
@@ -128,9 +173,8 @@ def main() -> None:
 
     print(json.dumps(results, indent=2))
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"[serve_bench] wrote {args.json}")
+        merge_bench_json(args.json, "serve_bench", results)
+        print(f"[serve_bench] merged into {args.json}")
 
 
 if __name__ == "__main__":

@@ -24,12 +24,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.reduce import reduced
+
+try:
+    from benchmarks.common import goodput_summary, merge_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from common import goodput_summary, merge_bench_json
 
 GENEROUS_GBPS = 1e6
 
@@ -76,6 +80,11 @@ def ngram_section(cfg, params, opts, common, reqs, args) -> dict:
             "decode_steps": s.decode_steps,
             "host_syncs": s.host_syncs,
             "token_identical": outs == want,
+            # trace-derived (SS15): draft overhead vs decode time, and
+            # goodput vs the SLO targets
+            "breakdown_ms": eng.trace.aggregate_breakdown_ms(),
+            "goodput": goodput_summary(eng.trace.slo_report(
+                args.slo_ttft_ms * 1e-3, args.slo_itl_ms * 1e-3)),
         })
     best = max(rows, key=lambda r: r["speedup"])
     return {
@@ -144,6 +153,9 @@ def spec_x_hbs_section(cfg, params, opts, common, reqs, args) -> dict:
                 "itl_p95_ms": round(s.itl_p95 * 1e3, 3),
                 "fetch_mb": round(s.fetch_bytes / 1e6, 3),
                 "acceptance_rate": round(s.acceptance_rate, 3),
+                "breakdown_ms": eng.trace.aggregate_breakdown_ms(),
+                "goodput": goodput_summary(eng.trace.slo_report(
+                    args.slo_ttft_ms * 1e-3, args.slo_itl_ms * 1e-3)),
             }
         row["spec_speedup"] = round(
             row["ngram"]["tps"] / max(row["off"]["tps"], 1e-9), 3)
@@ -180,6 +192,11 @@ def main() -> None:
                          "per stream")
     ap.add_argument("--hbs-bw-gbps", default="0.002,0.02")
     ap.add_argument("--skip-model-draft", action="store_true")
+    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="TTFT target for the goodput reports")
+    ap.add_argument("--slo-itl-ms", type=float, default=100.0,
+                    help="per-request p95 ITL target for the goodput "
+                         "reports")
     args = ap.parse_args()
 
     import jax
@@ -208,13 +225,7 @@ def main() -> None:
                                                      common, reqs, args)
     print(json.dumps(results, indent=2))
     if args.json:
-        merged = {}
-        if os.path.exists(args.json):
-            with open(args.json) as f:
-                merged = json.load(f)
-        merged["spec_sweep"] = results
-        with open(args.json, "w") as f:
-            json.dump(merged, f, indent=2)
+        merge_bench_json(args.json, "spec_sweep", results)
         print(f"[spec_sweep] merged into {args.json}")
 
 

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""CI smoke check for a serve trace artifact (DESIGN.md SS15).
+
+Loads a Chrome trace-event JSON produced by ``--trace-out`` (launch CLI
+or ``benchmarks/serve_bench.py``) and verifies it parses as valid Chrome
+trace-event format — the same structural validation the golden-trace
+test applies — plus the breakdown metadata's conservation invariant
+(per-request phase sums equal end-to-end latency).
+
+Usage: PYTHONPATH=src python scripts/check_trace.py trace.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.serving.trace import PHASES, validate_chrome_trace
+
+
+def main(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    counts = validate_chrome_trace(doc)
+    breakdowns = doc.get("metadata", {}).get("breakdowns", {})
+    worst = 0.0
+    for rid, bd in breakdowns.items():
+        parts = sum(bd[f"{p}_s"] for p in PHASES)
+        err = abs(parts - bd["e2e_s"])
+        worst = max(worst, err)
+        if err > 1e-6:
+            print(f"[check_trace] FAIL: request {rid} phase sum {parts} "
+                  f"!= e2e {bd['e2e_s']}")
+            return 1
+    print(f"[check_trace] OK: {path} — {counts['X']} spans, "
+          f"{counts['i']} instants, {counts['M']} metadata events, "
+          f"{len(breakdowns)} request breakdowns conserve time "
+          f"(worst drift {worst:.2e}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1]))

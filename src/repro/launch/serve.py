@@ -97,7 +97,23 @@ def main() -> None:
     ap.add_argument("--hbs-us", type=float, default=None,
                     help="override HBS issue latency (µs) for migration "
                          "timing")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's Chrome trace-event JSON here "
+                         "(perfetto-loadable: one track per request plus "
+                         "engine/DMA tracks on the virtual clock; "
+                         "continuous scheduler only — DESIGN.md SS15)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT target: print the goodput report (requests "
+                         "meeting SLO + per-phase blame for violators)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="per-request p95 inter-token-latency target for "
+                         "the goodput report")
     args = ap.parse_args()
+    wants_trace = (args.trace_out or args.slo_ttft_ms is not None
+                   or args.slo_itl_ms is not None)
+    if wants_trace and args.scheduler != "continuous":
+        ap.error("--trace-out/--slo-* need --scheduler continuous (the "
+                 "trace recorder instruments the continuous engine)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -182,6 +198,31 @@ def main() -> None:
                   f"blocks={s.spec_blocks} proposed={s.draft_proposed} "
                   f"accepted={s.draft_accepted} "
                   f"accept_rate={s.acceptance_rate:.0%}")
+        # ---- structured trace exports (DESIGN.md SS15) ---- #
+        if eng.trace is not None:
+            agg = eng.trace.aggregate_breakdown_ms()
+            print("[serve] time breakdown: " + " ".join(
+                f"{p}={agg[f'{p}_ms']:.1f}ms"
+                for p in ("queue", "prefill", "recompute", "decode",
+                          "stall", "draft")))
+            if args.slo_ttft_ms is not None or args.slo_itl_ms is not None:
+                rep = eng.trace.slo_report(
+                    None if args.slo_ttft_ms is None
+                    else args.slo_ttft_ms * 1e-3,
+                    None if args.slo_itl_ms is None
+                    else args.slo_itl_ms * 1e-3)
+                print(f"[serve] goodput: {rep['n_met_slo']}/"
+                      f"{rep['n_requests']} met SLO "
+                      f"(frac={rep['goodput_frac']:.2f})")
+                for v in rep["violators"][:6]:
+                    print(f"[serve]   violator r{v['rid']}: "
+                          f"ttft={v['ttft_ms']:.1f}ms "
+                          f"itl_p95={v['itl_p95_ms']:.1f}ms "
+                          f"blame={v['blame']}")
+            if args.trace_out:
+                eng.trace.save(args.trace_out)
+                print(f"[serve] wrote trace {args.trace_out} "
+                      f"(reconciled={eng.trace_report['ok']})")
     print("[serve] first output:", outs[0][:16])
 
 

@@ -46,6 +46,20 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _trace_proposals(drafter, items: List[Tuple[Request, int]],
+                     out: Dict[int, List[int]]) -> Dict[int, List[int]]:
+    """Stamp one ``spec_propose`` instant per drafted request (SS15). The
+    engine wires ``drafter.tracer``/``drafter.clock`` per serve; both stay
+    None when tracing is off."""
+    if drafter.tracer is not None and drafter.clock is not None:
+        t = drafter.clock()
+        for req, k in items:
+            drafter.tracer.instant(
+                "spec_propose", t, rid=req.rid,
+                args={"k": k, "n": len(out.get(req.rid, []))})
+    return out
+
+
 class NGramDraft:
     """Prompt-lookup draft: propose the continuation of the latest earlier
     occurrence of the request's trailing n-gram (longest n first).
@@ -61,6 +75,8 @@ class NGramDraft:
             raise ValueError("need 1 <= min_ngram <= max_ngram")
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
+        self.tracer = None                    # SS15: set by the engine
+        self.clock = None
         self._idx: Dict[int, Dict[int, Dict[tuple, int]]] = {}
         self._seen: Dict[int, int] = {}       # rid -> tokens indexed
 
@@ -110,7 +126,8 @@ class NGramDraft:
 
     def propose_all(self, items: List[Tuple[Request, int]]
                     ) -> Dict[int, List[int]]:
-        return {req.rid: self.propose(req, k) for req, k in items}
+        out = {req.rid: self.propose(req, k) for req, k in items}
+        return _trace_proposals(self, items, out)
 
     def drop(self, rid: int) -> None:
         self._idx.pop(rid, None)
@@ -164,6 +181,8 @@ class ModelDraft:
         self._propose = jax.jit(
             partial(decode_steps_paged, cfg, opts=self.opts, eos_id=None),
             static_argnames=("n_steps",), donate_argnums=(4,))
+        self.tracer = None                    # SS15: set by the engine
+        self.clock = None
         self._synced: Dict[int, bool] = {}    # rid -> has draft KV
 
     # ------------------------------------------------------------------ #
@@ -235,7 +254,8 @@ class ModelDraft:
         ks = [max(0, k) for _, k in items]
         k_top = max(ks)
         if k_top == 0:
-            return {req.rid: [] for req, _ in items}
+            return _trace_proposals(self, items,
+                                    {req.rid: [] for req, _ in items})
         tokens = np.zeros((B,), np.int32)
         lens = np.zeros((B,), np.int32)
         tables = np.zeros((B, self.n_pp), np.int32)
@@ -261,7 +281,7 @@ class ModelDraft:
             out[req.rid] = [int(t) for t in blk_np[i, :k]] if k > 0 else []
             if k > 0:
                 self.kv.release_reserved(req.rid)   # propose KV rolls back
-        return out
+        return _trace_proposals(self, items, out)
 
     def drop(self, rid: int) -> None:
         if self._synced.pop(rid, None):

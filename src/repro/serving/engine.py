@@ -44,10 +44,12 @@ from repro.models import (RuntimeOptions, copy_pages, decode_step,
                           init_paged_cache, init_params, paged_supported,
                           prefill, prefill_paged_chunk, spec_decode_verify)
 from repro.models import sampling
+from repro.serving import metrics
 from repro.serving.kv_manager import (PagedKVManager, SimulatedTierDevice,
                                       TierBudget, page_bytes)
 from repro.serving.scheduler import (PREFILLING, RUNNING, AdaptiveSpecK,
                                      ContinuousScheduler, Request)
+from repro.serving.trace import DECODE, DRAFT, STALL, TraceRecorder
 
 
 def _next_pow2(n: int) -> int:
@@ -125,7 +127,7 @@ class ServeStats:
         return self.new_tokens / t if t > 0 else 0.0
 
     def _pct(self, xs: List[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+        return metrics.percentile(xs, q)
 
     @property
     def ttft_p50(self) -> float:
@@ -290,6 +292,10 @@ class ServeEngine:
         self._chunk_shapes: set = set()   # distinct jitted prefill shapes
         self._decode_shapes: set = set()  # distinct jitted decode shapes
         self.kv_manager: Optional[PagedKVManager] = None  # set per serve()
+        # structured trace of the LAST serve_continuous run (SS15), plus
+        # its reconcile report (trace audited against ServeStats deltas)
+        self.trace: Optional[TraceRecorder] = None
+        self.trace_report: Optional[dict] = None
         self.stats = ServeStats()
 
     # ------------------------------------------------------------------ #
@@ -420,19 +426,47 @@ class ServeEngine:
         ps, n_pp = self.page_size, self.n_pages_per_seq
         B = self.max_batch
         C = self.prefill_chunk
+        # virtual clock (SS13): wall time plus every simulated migration
+        # stall absorbed so far, so TTFT/ITL/TPS price the HBS envelope.
+        # Defined first: every layer below stamps events on this clock.
+        voffset = 0.0
+
+        def now() -> float:
+            return time.perf_counter() + voffset
+
+        def absorb_stall(s: float) -> None:
+            nonlocal voffset
+            if s > 0:
+                voffset += s
+                self.stats.stall_s += s
+
+        # structured trace (SS15): one recorder per serve, threaded through
+        # the scheduler / KV manager / tier device / drafter; ServeStats is
+        # audited against it when the run finishes (reconcile below)
+        trace = TraceRecorder()
+        self.trace = trace
+        # stats accumulate across serve() calls but the trace covers only
+        # this one — snapshot now, reconcile against the deltas
+        snap_stall = self.stats.stall_s
+        snap_ttft, snap_itl = len(self.stats.ttft), len(self.stats.itl)
+        snap_tokens = self.stats.new_tokens
+        snap_srid = dict(self.stats.stall_by_rid)
         device = (SimulatedTierDevice.from_hierarchy(
                       self._tier_device_args[0], self._tier_device_args[1],
                       bw_gbps=self._tier_device_args[2],
                       latency_us=self._tier_device_args[3])
                   if self._tier_device_args is not None else None)
+        if device is not None:
+            device.tracer = trace
         kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget,
                             enable_prefix_cache=self.prefix_cache,
                             dtype_bytes=self.kv_dtype_bytes,
                             page_nbytes=self.page_nbytes,
-                            tier_device=device)
+                            tier_device=device, tracer=trace)
         self.kv_manager = kv
         sched = ContinuousScheduler(kv, B, prefill_chunk=C,
-                                    prefill_budget=self.prefill_budget)
+                                    prefill_budget=self.prefill_budget,
+                                    tracer=trace, clock=now)
         # draft proposer + acceptance-adaptive window sizing (SS14); fresh
         # per serve() so lookup indices / draft KV never leak across runs
         draft = adaptive = None
@@ -447,34 +481,26 @@ class ServeEngine:
                                max_len=self.max_len)
             self.draft_params = draft.params    # reuse across serve() calls
             adaptive = AdaptiveSpecK(self.spec_k)
+        if draft is not None:
+            draft.tracer, draft.clock = trace, now
         cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
-        # virtual clock (SS13): wall time plus every simulated migration
-        # stall absorbed so far, so TTFT/ITL/TPS price the HBS envelope
-        voffset = 0.0
-
-        def now() -> float:
-            return time.perf_counter() + voffset
-
-        def absorb_stall(s: float) -> None:
-            nonlocal voffset
-            if s > 0:
-                voffset += s
-                self.stats.stall_s += s
 
         def stall_barrier(reqs: List[Request], t0: float) -> None:
             """Fetch-wait barrier with per-request attribution: the batch
             absorbs the max wait, each request is charged its OWN pages'
             wait (SS13 deferred item)."""
             per: Dict[int, float] = {}
-            absorb_stall(kv.residency_stall([r.rid for r in reqs], t0,
-                                            per_seq=per))
+            s = kv.residency_stall([r.rid for r in reqs], t0, per_seq=per)
+            absorb_stall(s)
+            trace.absorbed_stall(t0, s)
             for r in reqs:
                 v = per.get(r.rid, 0.0)
                 if v > 0:
                     r.stall_s += v
                     self.stats.stall_by_rid[r.rid] = (
                         self.stats.stall_by_rid.get(r.rid, 0.0) + v)
+                    trace.span(r.rid, STALL, t0, t0 + v)
 
         for i, r in enumerate(requests):
             total = len(r) + max_new_tokens
@@ -485,13 +511,14 @@ class ServeEngine:
             req = Request(rid=i, prompt=list(r),
                           max_new_tokens=max_new_tokens)
             req.t_submit = now()
+            trace.submit(req.rid, req.t_submit)
             sched.submit(req)
 
         def finished(req: Request, tok: int) -> bool:
             return (req.remaining <= 0
                     or (self.eos_id is not None and tok == self.eos_id))
 
-        def emit(req: Request, tok: int, at: Optional[float] = None) -> None:
+        def emit(req: Request, tok: int, at: Optional[float] = None) -> float:
             # ``at``: attributed emission time — fused decode blocks spread
             # the block's wall time evenly over the tokens it produced
             t = now() if at is None else at
@@ -502,6 +529,8 @@ class ServeEngine:
             req.t_last = t
             req.out.append(tok)
             self.stats.new_tokens += 1
+            trace.token(req.rid, t, tok)
+            return t
 
         def note_peak():
             # snapshot the landed-page split whenever occupancy peaks —
@@ -560,7 +589,15 @@ class ServeEngine:
                     logits.block_until_ready()
                     self.stats.host_syncs += 1
                     calibrated = True
-                    self.stats.prefill_s += now() - t0
+                    t1 = now()
+                    self.stats.prefill_s += t1 - t0
+                    trace.engine_span(
+                        "prefill_chunk", t0, t1,
+                        {"rid": req.rid, "tokens": [start, start + n_real]})
+                    # recompute/prefill split by the request's computed
+                    # high-water mark (re-prefill after preemption)
+                    trace.prefill_span(req.rid, t0, t1, start,
+                                       start + n_real)
                     self.stats.prefill_tokens_computed += n_real
                     budget -= C
                     req.n_prefilled = start + n_real
@@ -582,9 +619,10 @@ class ServeEngine:
                         else:
                             tok = int(np.argmax(
                                 np.asarray(logits[0, F - 1 - start])))
-                        emit(req, tok)
+                        t_e = emit(req, tok)
                         if finished(req, tok):
                             sched.retire(slot)
+                            trace.retire(req.rid, t_e)
                             if draft is not None:
                                 draft.drop(req.rid)
 
@@ -603,6 +641,12 @@ class ServeEngine:
                 items = [(req, min(adaptive.k_for(req), req.remaining - 1))
                          for _, req in running]
                 props = draft.propose_all(items)
+                td = now()
+                trace.engine_span("spec_propose", t0, td,
+                                  {"n_seqs": len(items)})
+                for _, r in running:
+                    # the whole batch waits out the proposal pass
+                    trace.span(r.rid, DRAFT, t0, td)
                 # reserve draft_len+1 KV writes per slot, all-or-nothing;
                 # LIFO preemption may evict ANY slot — diff the full table
                 before = set(sched.slots)
@@ -641,14 +685,18 @@ class ServeEngine:
                 keys = self._block_keys(jnp.asarray(rids),
                                         jnp.asarray(emitted))
                 self._decode_shapes.add(("spec", B, n_tok))
-                stall_barrier([r for _, r in running], now())
+                tb = now()
+                stall_barrier([r for _, r in running], tb)
                 out, n_acc, _, cache = self._spec_verify(
                     self.params, jnp.asarray(tokens),
                     jnp.asarray(draft_len), jnp.asarray(seq_lens),
                     jnp.asarray(tables), cache, keys)
                 out_np = np.asarray(out)
                 nacc_np = np.asarray(n_acc)
-                dt = now() - t0
+                tv = now()
+                dt = tv - t0
+                trace.engine_span("spec_verify", tb, tv,
+                                  {"n_tok": n_tok, "n_seqs": len(running)})
                 self.stats.host_syncs += 1
                 self.stats.decode_s += dt
                 self.stats.decode_steps += 1    # one streaming pass
@@ -676,9 +724,14 @@ class ServeEngine:
                         if finished(req, tok):
                             fin = True
                             break
+                    t_end = t0 + dt * (n_written / m)
+                    trace.span(req.rid, DECODE, t0, t_end)
+                    trace.instant("spec_commit", t_end, rid=req.rid,
+                                  args={"proposed": dl, "accepted": acc})
                     kv.commit_speculative(req.rid, n_written)
                     if fin:
                         sched.retire(slot)
+                        trace.retire(req.rid, t_end)
                         draft.drop(req.rid)
             else:
                 # ---- reserve the block's KV writes up front (may
@@ -742,7 +795,11 @@ class ServeEngine:
                         n_steps=n_steps, done=jnp.asarray(inactive),
                         quota=jnp.asarray(quota))
                 blk_np = np.asarray(blk)
-                dt = now() - t0
+                tv = now()
+                dt = tv - t0
+                trace.engine_span("decode_block", t0, tv,
+                                  {"n_steps": n_steps,
+                                   "n_seqs": len(running)})
                 self.stats.host_syncs += 1
                 self.stats.decode_s += dt
                 self.stats.decode_steps += n_steps
@@ -759,9 +816,12 @@ class ServeEngine:
                         if finished(req, tok):
                             fin = True
                             break
+                    t_end = t0 + dt * (n_written / n_steps)
+                    trace.span(req.rid, DECODE, t0, t_end)
                     kv.commit_tokens(req.rid, n_written)
                     if fin:
                         sched.retire(slot)   # frees surplus reserved pages
+                        trace.retire(req.rid, t_end)
 
             # prefetch AHEAD of the next block, backdated to this block's
             # launch: the next block reads the same sequences' pages, so
@@ -786,5 +846,16 @@ class ServeEngine:
         self.stats.decode_compiles = len(self._decode_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"
         assert kv.n_used == 0, "page leak: retired sequences kept pages"
+        # close the trace and audit the aggregate counters against it:
+        # phase sums == e2e per request, stall totals and samples match
+        # this serve's ServeStats deltas (raises on drift — SS15)
+        trace.finalize(now())
+        self.trace_report = trace.reconcile(
+            stall_s=self.stats.stall_s - snap_stall,
+            ttft=self.stats.ttft[snap_ttft:],
+            itl=self.stats.itl[snap_itl:],
+            new_tokens=self.stats.new_tokens - snap_tokens,
+            stall_by_rid={rid: v - snap_srid.get(rid, 0.0)
+                          for rid, v in self.stats.stall_by_rid.items()})
         by_rid = {req.rid: req.out for req in sched.done}
         return [by_rid[i] for i in range(len(requests))]

@@ -78,6 +78,7 @@ class SimulatedTierDevice:
     """
     bandwidth: float                     # bytes/s across the offload link
     latency: float                       # seconds per migration batch issue
+    tracer: Optional[object] = None      # TraceRecorder: DMA-track spans
     _free: Dict[str, float] = field(
         default_factory=lambda: {"in": 0.0, "out": 0.0})
     busy_s: Dict[str, float] = field(
@@ -104,6 +105,8 @@ class SimulatedTierDevice:
         done = start + self.latency + n_bytes / self.bandwidth
         self.busy_s[channel] += done - start
         self._free[channel] = done
+        if self.tracer is not None:
+            self.tracer.device_span(channel, start, done, n_bytes)
         return done
 
 
@@ -218,7 +221,8 @@ class PagedKVManager:
                  enable_prefix_cache: bool = False,
                  dtype_bytes: int = 2,
                  page_nbytes: Optional[float] = None,
-                 tier_device: Optional[SimulatedTierDevice] = None):
+                 tier_device: Optional[SimulatedTierDevice] = None,
+                 tracer: Optional[object] = None):
         if tier_budget is not None:
             n_pages = min(n_pages, tier_budget.total_pages + 1)
         if n_pages < 2:
@@ -232,6 +236,9 @@ class PagedKVManager:
         self.dtype_bytes = dtype_bytes
         self.page_nbytes = float(page_nbytes or 0.0)
         self.tier_device = tier_device
+        # optional TraceRecorder (SS15): prefetch hit/miss instants land on
+        # the DMA-in track as they are consumed by the fetch-wait barrier
+        self.tracer = tracer
         # --- per-page tier residency (SS13) --- #
         # every ASSIGNED page (referenced or cached-evictable) lives in
         # exactly one budget tier; free pages are unassigned
@@ -548,11 +555,14 @@ class PagedKVManager:
                 if p not in self._fetch_pending:
                     continue
                 self._fetch_pending.discard(p)
-                if self._ready_at.get(p, now) <= now:
+                hit = self._ready_at.get(p, now) <= now
+                if hit:
                     self.prefetch_hits += 1
                     self._ready_at.pop(p, None)
                 else:
                     self.prefetch_misses += 1
+                if self.tracer is not None:
+                    self.tracer.prefetch(p, hit, now)
         return max(0.0, ready - now)
 
     # ---------------------------- allocation --------------------------- #

@@ -109,12 +109,17 @@ class ContinuousScheduler:
 
     def __init__(self, kv: PagedKVManager, max_batch: int, *,
                  prefill_chunk: Optional[int] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 tracer=None, clock=None):
         """``prefill_chunk``: tokens per prefill chunk (None: the engine
         prefills whole prompts in one shot — legacy mode). ``prefill_budget``
-        caps prefill tokens per engine step (default: one chunk)."""
+        caps prefill tokens per engine step (default: one chunk).
+        ``tracer``/``clock``: optional TraceRecorder + virtual-clock callable
+        (SS15); admissions and preemptions stamp instant events."""
         self.kv = kv
         self.max_batch = max_batch
+        self.tracer = tracer
+        self.clock = clock
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget or prefill_chunk or 0
         if prefill_chunk and self.prefill_budget < prefill_chunk:
@@ -221,6 +226,9 @@ class ContinuousScheduler:
             self._admit_stamp += 1
             self.slots[slot] = req
             admitted.append((slot, req))
+            if self.tracer is not None:
+                self.tracer.admit(req.rid, self.clock(),
+                                  cached_tokens=req.n_prefilled, slot=slot)
         return admitted
 
     def finish_prefill(self, slot: int) -> None:
@@ -257,6 +265,10 @@ class ContinuousScheduler:
         # covers the legacy grow-then-write accounting too.
         n_valid = (req.n_prefilled if req.state == PREFILLING
                    else max(len(req.prefill_tokens) - 1, 0))
+        if self.tracer is not None:
+            # n_valid raises the recorder's computed high-water mark so the
+            # victim's re-prefill is attributed as recompute, not prefill
+            self.tracer.preempt(req.rid, self.clock(), n_valid=n_valid)
         self.kv.register_prefix(req.rid, req.prefill_tokens, n_valid=n_valid)
         self.kv.free_seq(req.rid)
         req.state = WAITING

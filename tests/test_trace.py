@@ -1,0 +1,407 @@
+"""Structured tracing + latency attribution (DESIGN.md SS15).
+
+Recorder units (tiling, clamping, recompute split, SLO blame, Chrome
+structure), a hypothesis property that span accounting conserves time
+under arbitrary engine-like event schedules (per-request phase sums ==
+end-to-end latency; absorbed stalls == the stats counter), and golden
+engine runs asserting event ordering, valid Chrome trace-event output
+and strict trace/ServeStats reconciliation on the real serve loop."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.serving.trace import (DECODE, DRAFT, PHASES, PREFILL, QUEUE,
+                                 RECOMPUTE, STALL, TraceRecorder,
+                                 validate_chrome_trace)
+
+
+def _sum_phases(bd):
+    return sum(bd[f"{p}_s"] for p in PHASES)
+
+
+# --------------------------- recorder units ----------------------------- #
+
+def test_span_tiling_fills_gaps_as_queue():
+    tr = TraceRecorder()
+    tr.submit(0, 10.0)
+    tr.admit(0, 11.0)
+    tr.span(0, PREFILL, 12.0, 13.0)      # 11 -> 12 gap becomes queue
+    tr.retire(0, 13.5)                   # trailing gap too
+    bd = tr.breakdown(0)
+    assert bd["queue_s"] == pytest.approx(2.5)
+    assert bd["prefill_s"] == pytest.approx(1.0)
+    assert bd["e2e_s"] == pytest.approx(3.5)
+    assert _sum_phases(bd) == pytest.approx(bd["e2e_s"])
+
+
+def test_span_overlap_clamps_instead_of_double_counting():
+    """A decode span launched at a block start whose stall span already
+    tiled the barrier must only contribute its uncovered tail."""
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.span(0, STALL, 0.0, 1.0)
+    tr.span(0, DECODE, 0.0, 3.0)         # overlaps [0, 1)
+    bd = tr.breakdown(0)
+    assert bd["stall_s"] == pytest.approx(1.0)
+    assert bd["decode_s"] == pytest.approx(2.0)
+    assert bd["e2e_s"] == pytest.approx(3.0)
+
+
+def test_span_fully_covered_is_dropped():
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.span(0, DECODE, 0.0, 2.0)
+    tr.span(0, STALL, 0.5, 1.5)          # entirely inside tiled time
+    bd = tr.breakdown(0)
+    assert bd["stall_s"] == 0.0
+    assert bd["decode_s"] == pytest.approx(2.0)
+
+
+def test_unknown_phase_rejected():
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    with pytest.raises(ValueError, match="unknown phase"):
+        tr.span(0, "gpu", 0.0, 1.0)
+
+
+def test_prefill_span_recompute_split():
+    """Re-prefill below the computed-extent high-water mark is labelled
+    recompute; fresh tokens stay prefill; mixed chunks split
+    proportionally in time."""
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.prefill_span(0, 0.0, 1.0, 0, 32)      # first pass: all prefill
+    tr.preempt(0, 1.0, n_valid=32)           # KV lost, extent remembered
+    tr.prefill_span(0, 2.0, 3.0, 0, 32)      # full re-prefill: recompute
+    tr.prefill_span(0, 3.0, 4.0, 32, 48)     # fresh extension: prefill
+    bd = tr.breakdown(0)
+    assert bd["recompute_s"] == pytest.approx(1.0)
+    assert bd["prefill_s"] == pytest.approx(2.0)
+    assert bd["queue_s"] == pytest.approx(1.0)       # preempted wait
+    assert bd["n_preemptions"] == 1
+
+
+def test_prefill_span_partial_recompute_proportional():
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.preempt(0, 0.0, n_valid=8)
+    tr.prefill_span(0, 0.0, 1.0, 0, 16)      # half old, half new
+    bd = tr.breakdown(0)
+    assert bd["recompute_s"] == pytest.approx(0.5)
+    assert bd["prefill_s"] == pytest.approx(0.5)
+
+
+def test_ttft_itl_derived_from_token_instants():
+    tr = TraceRecorder()
+    tr.submit(3, 1.0)
+    tr.token(3, 1.5, 42)
+    tr.token(3, 1.7, 43)
+    tr.token(3, 2.0, 44)
+    tr.retire(3, 2.0)
+    bd = tr.breakdown(3)
+    assert bd["ttft_s"] == pytest.approx(0.5)
+    assert bd["itl_s"] == pytest.approx([0.2, 0.3])
+    assert bd["n_tokens"] == 3
+
+
+def test_slo_report_blames_dominant_window_phase():
+    """TTFT violators are blamed on the dominant phase of their
+    [submit, first token] window — here a fetch stall."""
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.span(0, STALL, 0.0, 1.0)
+    tr.span(0, DECODE, 1.0, 1.2)
+    tr.token(0, 1.1, 5)
+    tr.retire(0, 1.2)
+    tr.submit(1, 0.0)                        # meets the target
+    tr.span(1, DECODE, 0.0, 0.1)
+    tr.token(1, 0.05, 5)
+    tr.retire(1, 0.1)
+    rep = tr.slo_report(ttft_target_s=0.5)
+    assert rep["n_requests"] == 2 and rep["n_met_slo"] == 1
+    assert rep["goodput_frac"] == 0.5
+    (v,) = rep["violators"]
+    assert v["rid"] == 0 and v["blame"] == "stall"
+    assert v["blame_window_ms"]["stall"] == pytest.approx(1000.0)
+    # no targets -> everything counts as goodput
+    assert tr.slo_report()["goodput_frac"] == 1.0
+
+
+def test_reconcile_strict_raises_on_drift():
+    tr = TraceRecorder()
+    tr.submit(0, 0.0)
+    tr.span(0, DECODE, 0.0, 1.0)
+    tr.token(0, 1.0, 9)
+    tr.retire(0, 1.0)
+    tr.finalize(1.0)
+    ok = tr.reconcile(stall_s=0.0, ttft=[1.0], itl=[], new_tokens=1)
+    assert ok["ok"] and not ok["failures"]
+    with pytest.raises(AssertionError, match="drift"):
+        tr.reconcile(stall_s=0.25, ttft=[1.0], itl=[], new_tokens=1)
+    bad = tr.reconcile(stall_s=0.25, ttft=[0.9], itl=[0.1], new_tokens=2,
+                       strict=False)
+    assert not bad["ok"] and len(bad["failures"]) == 4
+
+
+def test_chrome_export_structure_and_validation():
+    tr = TraceRecorder()
+    tr.submit(0, 5.0)
+    tr.admit(0, 5.1)
+    tr.span(0, DECODE, 5.1, 5.3)
+    tr.token(0, 5.2, 7)
+    tr.retire(0, 5.3)
+    tr.engine_span("decode_block", 5.1, 5.3, {"n_steps": 2})
+    tr.device_span("in", 5.0, 5.05, 4096)
+    tr.absorbed_stall(5.05, 0.01)
+    doc = tr.to_chrome()
+    counts = validate_chrome_trace(doc)
+    assert counts["X"] >= 4 and counts["i"] >= 3 and counts["M"] >= 6
+    ev = doc["traceEvents"]
+    # timestamps are rebased: everything non-negative, µs scale
+    assert all(e["ts"] >= 0 for e in ev if e["ph"] != "M")
+    names = {e["name"] for e in ev}
+    assert {"admit", "first_token", "retire", "decode", "decode_block",
+            "fetch", "stall", "process_name", "thread_name"} <= names
+    assert doc["metadata"]["breakdowns"]["0"]["n_tokens"] == 1
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no": "events"})
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": []})
+    with pytest.raises(ValueError, match="unsupported ph"):
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "B", "pid": 1, "tid": 0, "name": "x", "ts": 0}]})
+    with pytest.raises(ValueError, match="bad dur"):
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+             "args": {"name": "p"}},
+            {"ph": "X", "pid": 1, "tid": 0, "name": "x", "ts": 0,
+             "dur": -1}]})
+    with pytest.raises(ValueError, match="no track-naming"):
+        validate_chrome_trace({"traceEvents": [
+            {"ph": "i", "pid": 1, "tid": 0, "name": "x", "ts": 0}]})
+
+
+# ---------------------- conservation property test ---------------------- #
+
+def _replay_random_schedule(rng):
+    """Replay an arbitrary engine-like schedule — staggered submits,
+    barrier stalls with per-request attribution, prefill/decode/draft
+    blocks whose spans overlap the stall tiles the way real engine
+    blocks do (launched at the block start), token emission — against a
+    shadow ServeStats-style accumulator. Conservation must hold: every
+    request's phase partition sums to its e2e latency, the trace's stall
+    total equals the accumulated stat, and reconcile() passes strictly."""
+    n = int(rng.integers(1, 5))
+    tr = TraceRecorder()
+    stats_stall = 0.0
+    stall_by_rid = {}
+    ttft, itl, last_tok = [], [], {}
+    t = 100.0
+    submit_t = {}
+    for rid in range(n):
+        t += float(rng.uniform(0.0, 0.01))
+        submit_t[rid] = t
+        tr.submit(rid, t)
+    for _ in range(int(rng.integers(1, 11))):
+        k = int(rng.integers(1, n + 1))
+        rids = rng.choice(n, size=k, replace=False).tolist()
+        t0 = t
+        # fetch-wait barrier: the batch absorbs the max of per-request
+        # waits, each request is blamed for its own
+        per = {rid: (float(rng.uniform(0.0, 0.02))
+                     if rng.random() < 0.5 else 0.0) for rid in rids}
+        s = max(per.values())
+        if s > 0:
+            stats_stall += s
+            tr.absorbed_stall(t0, s)
+        for rid, v in per.items():
+            if v > 0:
+                stall_by_rid[rid] = stall_by_rid.get(rid, 0.0) + v
+                tr.span(rid, STALL, t0, t0 + v)
+        t = t0 + s + float(rng.uniform(0.001, 0.02))
+        phase = (PREFILL, DECODE, DRAFT)[int(rng.integers(3))]
+        for rid in rids:
+            tr.span(rid, phase, t0, t)
+            if phase == DECODE:
+                if rid in last_tok:
+                    itl.append(t - last_tok[rid])
+                else:
+                    ttft.append(t - submit_t[rid])
+                last_tok[rid] = t
+                tr.token(rid, t, 7)
+    for rid in range(n):
+        tr.retire(rid, t)
+    tr.finalize(t)
+    rep = tr.reconcile(stall_s=stats_stall, ttft=ttft, itl=itl,
+                       new_tokens=len(ttft) + len(itl),
+                       stall_by_rid=stall_by_rid)
+    assert rep["ok"]
+    for rid in range(n):
+        bd = tr.breakdown(rid)
+        assert abs(_sum_phases(bd) - bd["e2e_s"]) < 1e-9
+        assert bd["e2e_s"] == pytest.approx(t - submit_t[rid])
+    assert validate_chrome_trace(tr.to_chrome())["M"] >= 5 + n
+
+
+def test_span_accounting_conserves_time_seeded():
+    """Deterministic fallback sweep of the conservation property (always
+    runs, even without hypothesis)."""
+    for seed in range(32):
+        _replay_random_schedule(np.random.default_rng(seed))
+
+
+def test_hypothesis_span_accounting_conserves_time():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=100, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def run(seed):
+        _replay_random_schedule(np.random.default_rng(seed))
+
+    run()
+
+
+# ------------------------- golden engine traces ------------------------- #
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    from repro.models import RuntimeOptions, init_params
+
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2,
+                  vocab=128)
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    return cfg, opts, params
+
+
+def _offload_hierarchy(cfg, fast_pages, page_size=8):
+    from repro.core import hbs, lpddr6, npu_hierarchy
+    from repro.serving.kv_manager import page_bytes
+
+    pb = page_bytes(cfg, page_size, 4)
+    return npu_hierarchy(lpddr6(capacity_gb=fast_pages * pb / 1e9),
+                         hbs(8.0, latency_us=20.0, capacity_gb=1.0))
+
+
+def test_golden_trace_offload_run(small_model):
+    """Deterministic small serve with a stingy offload tier: the trace
+    must reconcile strictly, export valid Chrome JSON, keep per-request
+    events ordered (admit <= first_token <= retire), tile each request
+    track without overlap, and conserve time in every breakdown."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(1, cfg.vocab, size=n).tolist()
+            for n in (20, 9, 14)]
+    hier = _offload_hierarchy(cfg, fast_pages=4)
+    eng = ServeEngine(cfg, params, opts, max_len=40,
+                      scheduler="continuous", page_size=8, max_batch=3,
+                      prefill_budget=96, hierarchy=hier, hbs_gbps=1e-3,
+                      hbs_latency_us=500.0)
+    eng.serve([r[:] for r in reqs], 8)
+
+    tr = eng.trace
+    assert eng.trace_report["ok"], eng.trace_report["failures"]
+    doc = tr.to_chrome()
+    counts = validate_chrome_trace(doc)
+    assert counts["X"] > 0 and counts["i"] > 0
+    ev = doc["traceEvents"]
+    names = {e["name"] for e in ev}
+    assert {"admit", "first_token", "retire", "prefill_chunk",
+            "decode_block", "fetch", "stall"} <= names
+
+    for rid in range(len(reqs)):
+        inst = {e["name"]: e["ts"] for e in ev
+                if e["ph"] == "i" and e["pid"] == 1 and e["tid"] == rid}
+        assert inst["admit"] <= inst["first_token"] <= inst["retire"]
+        spans = sorted((e["ts"], e["ts"] + e["dur"]) for e in ev
+                       if e["ph"] == "X" and e["pid"] == 1
+                       and e["tid"] == rid)
+        for (_, e0), (s1, _) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-3          # contiguous tiling (µs tol)
+
+    for rid, bd in tr.breakdowns().items():
+        assert abs(_sum_phases(bd) - bd["e2e_s"]) <= 1e-6
+        assert bd["n_tokens"] == 8
+    # the stingy tier stalls for real, and the trace attributes it
+    agg = tr.aggregate_breakdown_ms()
+    assert agg["stall_ms"] > 0
+    assert eng.stats.stall_s * 1e3 == pytest.approx(
+        tr.stall_total * 1e3)
+
+    # goodput report: impossible targets blame every request, absent
+    # targets pass every request
+    rep = tr.slo_report(1e-9, 1e-9)
+    assert rep["goodput_frac"] == 0.0
+    assert len(rep["violators"]) == len(reqs)
+    assert all(v["blame"] in PHASES for v in rep["violators"])
+    assert tr.slo_report()["goodput_frac"] == 1.0
+
+
+def test_trace_spec_decode_draft_phase(small_model):
+    """Speculative serve: draft proposal overhead lands in the DRAFT
+    phase and the spec_propose/spec_commit instants appear."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(0)
+    doc = rng.integers(1, cfg.vocab, size=32).tolist()
+    reqs = [doc + rng.integers(1, cfg.vocab, size=4).tolist()
+            for _ in range(2)]
+    eng = ServeEngine(cfg, params, opts, max_len=72,
+                      scheduler="continuous", page_size=8, max_batch=2,
+                      spec_mode="ngram", spec_k=4)
+    eng.serve([r[:] for r in reqs], 16)
+    assert eng.trace_report["ok"], eng.trace_report["failures"]
+    names = {e["name"] for e in eng.trace.to_chrome()["traceEvents"]}
+    assert {"spec_propose", "spec_verify", "spec_commit"} <= names
+    agg = eng.trace.aggregate_breakdown_ms()
+    assert agg["draft_ms"] > 0
+    assert agg["decode_ms"] > 0
+
+
+def test_trace_preemption_recompute_attribution(small_model):
+    """A pool too small for everyone's lookahead windows preempts LIFO;
+    without the prefix cache the re-prefill is honest recompute and the
+    trace labels it so."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    reqs = [list(range(1, 5)), list(range(5, 9))]
+    eng = ServeEngine(cfg, params, opts, max_len=32,
+                      scheduler="continuous", page_size=4, max_batch=2,
+                      n_pages=6, decode_lookahead=4, prefix_cache=False)
+    eng.serve([r[:] for r in reqs], 12)
+    assert eng.stats.preemptions >= 1
+    assert eng.trace_report["ok"], eng.trace_report["failures"]
+    names = {e["name"] for e in eng.trace.to_chrome()["traceEvents"]}
+    assert "preempt" in names
+    bds = eng.trace.breakdowns()
+    assert sum(bd["n_preemptions"] for bd in bds.values()) \
+        == eng.stats.preemptions
+    assert any(bd["recompute_s"] > 0 for bd in bds.values())
+
+
+def test_second_serve_on_same_engine_reconciles(small_model):
+    """ServeStats accumulates across serve() calls; the per-serve trace
+    must reconcile against the deltas, not the lifetime totals."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(7)
+    reqs = [rng.integers(1, cfg.vocab, size=12).tolist() for _ in range(2)]
+    eng = ServeEngine(cfg, params, opts, max_len=32,
+                      scheduler="continuous", page_size=8, max_batch=2)
+    eng.serve([r[:] for r in reqs], 6)
+    first = eng.trace
+    eng.serve([r[:] for r in reqs], 6)
+    assert eng.trace is not first                  # fresh recorder
+    assert eng.trace_report["ok"], eng.trace_report["failures"]
+    assert len(eng.stats.ttft) == 4                # totals kept growing
