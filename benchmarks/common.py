@@ -19,6 +19,7 @@ BENCH_SECTIONS: Dict[str, Tuple[str, ...]] = {
                     "derived"),
     "hbs_sweep": ("analytic_13b", "measured_reduced"),
     "spec_sweep": ("workload", "ngram", "spec_x_hbs"),
+    "shard_sweep": ("workload", "overlap", "mesh", "capacity"),
 }
 
 

@@ -1,0 +1,250 @@
+"""Multi-device sharded serving sweep (DESIGN.md SS16).
+
+Three questions, answered on the CPU rig (host devices via
+``--xla_force_host_platform_device_count``) with the reduced dense twin:
+
+* **overlap** — does the two-stream engine (prefill worker + decode
+  worker on the virtual clock) beat the serialized loop on a mixed
+  prefill+decode workload? Gate: overlapped TPS > serialized TPS, token
+  identity across both.
+* **mesh** — token identity of the head-sharded engine across mesh sizes
+  {1, 2, 4}, plus per-mesh makespan/TPS, and the per-device analytic
+  bridge: ``concurrent_inference(kv_shards=N)`` at full 13B scale shows
+  the per-chip KV footprint shrinking with N (the paper's memory
+  constraint is per chip).
+* **capacity** — a per-device tier budget admits what one device cannot:
+  a working set the single-device pool rejects outright serves
+  token-identically on the 4-way mesh, and a concurrent workload that
+  forces preemptions at N=1 runs preemption-free at N=4.
+
+Run: PYTHONPATH=src python benchmarks/shard_sweep.py --json
+(merges its section into BENCH_serve.json next to the other serving
+benchmarks). The device-count flag must land before jax initializes, so
+this module prepends it to XLA_FLAGS at import.
+"""
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+try:
+    from benchmarks.common import merge_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from common import merge_bench_json
+
+
+def _model(args):
+    import jax
+    from repro.configs import get_config
+    from repro.configs.reduce import reduced
+    from repro.models import RuntimeOptions, init_params
+
+    cfg = dataclasses.replace(
+        reduced(get_config("llama3.2-1b"), d_model=args.d_model,
+                n_layers=2, vocab=128),
+        n_kv_heads=4)                    # divisible by meshes {1, 2, 4}
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    return cfg, opts, params
+
+
+def _workload(cfg, args):
+    """Mixed prefill+decode stream: ragged prompts, more requests than
+    slots, so admissions keep prefilling while earlier requests decode —
+    the regime where the two streams actually overlap."""
+    rng = np.random.default_rng(0)
+    lens = [args.prompt_len if i % 2 == 0 else max(args.prompt_len // 3, 4)
+            for i in range(args.n_requests)]
+    return [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def _run(cfg, params, opts, reqs, args, **kw):
+    from repro.serving import ServeEngine
+
+    common = dict(max_len=args.prompt_len + args.new_tokens,
+                  scheduler="continuous", page_size=args.page_size,
+                  max_batch=args.max_batch)
+    common.update(kw)
+    eng = ServeEngine(cfg, params, opts, **common)
+    eng.serve([r[:] for r in reqs], args.new_tokens)       # warm jit
+    eng.stats.__init__()
+    outs = eng.serve([r[:] for r in reqs], args.new_tokens)
+    return eng, outs
+
+
+def _cell(eng):
+    s = eng.stats
+    return {"tps": round(s.tps, 2),
+            "serve_ms": round(s.serve_s * 1e3, 3),
+            "prefill_ms": round(s.prefill_s * 1e3, 3),
+            "decode_ms": round(s.decode_s * 1e3, 3),
+            "preemptions": s.preemptions,
+            "peak_fast_pages": s.peak_fast_pages}
+
+
+def overlap_section(cfg, params, opts, reqs, args, want) -> dict:
+    over, o_outs = _run(cfg, params, opts, reqs, args, overlap=True)
+    ser, s_outs = _run(cfg, params, opts, reqs, args, overlap=False)
+    o, s = _cell(over), _cell(ser)
+    return {
+        "overlapped": o, "serialized": s,
+        "token_identical": o_outs == want and s_outs == want,
+        "speedup": round(s["serve_ms"] / max(o["serve_ms"], 1e-9), 3),
+        "overlap_beats_serialized": o["tps"] > s["tps"],
+    }
+
+
+def mesh_section(cfg, params, opts, reqs, args, want) -> dict:
+    import jax
+
+    n_dev = len(jax.devices())
+    cells = {}
+    for shards in (1, 2, 4):
+        if shards > n_dev or cfg.n_kv_heads % shards:
+            continue
+        eng, outs = _run(cfg, params, opts, reqs, args, shards=shards)
+        cells[f"mesh{shards}"] = dict(_cell(eng),
+                                      token_identical=outs == want)
+
+    # per-device analytic bridge at FULL 13B scale: each chip holds 1/N
+    # of the paged KV, so the per-chip footprint (the paper's constraint)
+    # shrinks with the mesh while weights/activations replicate
+    from repro.configs import get_config
+    from repro.core import (TC, concurrent_inference, ddr_only, hbs,
+                            lpddr6, npu_hierarchy, resident_bytes)
+    big = get_config("llava15-13b")
+    hier = npu_hierarchy(lpddr6(520.0, capacity_gb=32.0),
+                         hbs(8.0, latency_us=20.0, capacity_gb=64.0))
+    analytic = {}
+    for n in (1, 2, 4):
+        pt = concurrent_inference(big, hier, ddr_only(), n_concurrent=4,
+                                  prefill_len=4096, decode_len=256,
+                                  dtype_bytes=2, kv_shards=n)
+        fp = resident_bytes(big, 4096 + 256, 4, 2)
+        analytic[f"kv_shards{n}"] = {
+            "kv_gb_per_chip": round(fp[TC.KV] / n / 1e9, 3),
+            "aggregate_tps": round(pt.aggregate_tps, 3),
+        }
+    kv1 = analytic["kv_shards1"]["kv_gb_per_chip"]
+    kv4 = analytic["kv_shards4"]["kv_gb_per_chip"]
+    return {"n_devices": n_dev, "cells": cells,
+            "all_token_identical": all(c["token_identical"]
+                                       for c in cells.values()),
+            "analytic_13b_per_chip": analytic,
+            "per_chip_kv_shrinks": kv4 < kv1}
+
+
+def capacity_section(cfg, params, opts, args, want_fn) -> dict:
+    import jax
+    from repro.core import hbs, lpddr6, npu_hierarchy
+    from repro.serving.kv_manager import page_bytes
+
+    n_dev = len(jax.devices())
+    ps = args.page_size
+    pb = page_bytes(cfg, ps, 4)
+    rng = np.random.default_rng(7)
+
+    # (a) reject vs serve: one long request whose KV exceeds the WHOLE
+    # single-device hierarchy but fits the 4-way per-device slices
+    long_req = rng.integers(1, cfg.vocab,
+                            size=3 * ps).tolist()          # 4 pages + new
+    tight = npu_hierarchy(lpddr6(capacity_gb=1.5 * pb / 1e9),
+                          hbs(1e3, latency_us=0.0,
+                              capacity_gb=2.5 * pb / 1e9))
+    single_rejects = False
+    try:
+        _run(cfg, params, opts, [long_req], args, hierarchy=tight)
+    except ValueError as e:
+        single_rejects = "across all" in str(e)
+    out = {"single_device_rejects": single_rejects}
+    if n_dev >= 4:
+        want = want_fn([long_req])
+        eng4, outs4 = _run(cfg, params, opts, [long_req], args,
+                           hierarchy=tight, shards=4)
+        out["mesh4_serves_token_identical"] = outs4 == want
+        out["mesh4_peak_fast_pages"] = eng4.stats.peak_fast_pages
+
+    # (b) concurrency under pressure: each request fits alone, but the
+    # JOINT working set exceeds the N=1 pool — the scheduler can only run
+    # the mix by preempting. The 4-way per-device budget holds 4x the
+    # pages, so the same mix runs fully resident, preemption-free.
+    conc = [rng.integers(1, cfg.vocab, size=2 * ps).tolist()
+            for _ in range(4)]
+    need = sum(-(-(len(r) + args.new_tokens) // ps) for r in conc)
+    tight2 = npu_hierarchy(
+        lpddr6(capacity_gb=(need // 4 + 0.5) * pb / 1e9),
+        hbs(1e3, latency_us=0.0,
+            capacity_gb=(need // 2 - need // 4 + 0.5) * pb / 1e9))
+    want = want_fn(conc)
+    eng1, outs1 = _run(cfg, params, opts, conc, args, hierarchy=tight2,
+                       max_batch=4)
+    out["n1"] = dict(_cell(eng1), token_identical=outs1 == want)
+    if n_dev >= 4:
+        eng4, outs4 = _run(cfg, params, opts, conc, args, hierarchy=tight2,
+                           max_batch=4, shards=4)
+        out["n4"] = dict(_cell(eng4), token_identical=outs4 == want)
+        out["mesh_relieves_pressure"] = (
+            eng1.stats.preemptions > 0
+            and eng4.stats.preemptions == 0)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_serve.json",
+                    default=None,
+                    help="merge results into this JSON file under the "
+                         "'shard_sweep' key")
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg, opts, params = _model(args)
+    reqs = _workload(cfg, args)
+
+    # token-identity reference: the plain single-device overlapped engine
+    def want_fn(rs):
+        _, outs = _run(cfg, params, opts, rs, args)
+        return outs
+
+    want = want_fn(reqs)
+    results = {
+        "workload": {
+            "arch": cfg.name, "n_requests": len(reqs),
+            "prompt_lens": sorted({len(r) for r in reqs}),
+            "new_tokens": args.new_tokens,
+            "max_batch": args.max_batch, "page_size": args.page_size,
+        },
+        "overlap": overlap_section(cfg, params, opts, reqs, args, want),
+        "mesh": mesh_section(cfg, params, opts, reqs, args, want),
+        "capacity": capacity_section(cfg, params, opts, args, want_fn),
+    }
+    print(json.dumps(results, indent=2))
+    if args.json:
+        merge_bench_json(args.json, "shard_sweep", results)
+        print(f"[shard_sweep] merged into {args.json}")
+    gates = (results["overlap"]["overlap_beats_serialized"],
+             results["overlap"]["token_identical"],
+             results["mesh"]["all_token_identical"],
+             results["capacity"]["single_device_rejects"])
+    print(f"[shard_sweep] gates: overlap_beats_serialized={gates[0]} "
+          f"token_identical={gates[1]} mesh_identical={gates[2]} "
+          f"per_device_budget={gates[3]}")
+
+
+if __name__ == "__main__":
+    main()

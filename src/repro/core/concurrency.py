@@ -91,7 +91,8 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
                          dtype_bytes: int = 2,
                          kv_split: Optional[Sequence[Tuple[str, float]]] = None,
                          shared_prefix_len: int = 0,
-                         share_group: int = 1) -> ConcurrencyPoint:
+                         share_group: int = 1,
+                         kv_shards: int = 1) -> ConcurrencyPoint:
     """Serve ``n_concurrent`` simultaneous requests analytically.
 
     The aggregate KV footprint (``TC.KV`` scaled by batch) runs through
@@ -104,15 +105,25 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
     capacity pass, so shared-document workloads spill later and fit more
     concurrency (the headroom the paged pool actually realizes).
 
+    ``kv_shards`` is the per-device analytic view of head-sharded serving
+    (DESIGN.md SS16): an N-way mesh leaves each device Hkv/N heads of
+    every request's KV, so the per-chip ``TC.KV`` footprint — what this
+    hierarchy's capacities constrain — divides by N while weights and
+    activations replicate. The runtime twin is ``ServeEngine(shards=N)``,
+    whose ``TierBudget`` divides page bytes the same way.
+
     A pinned ``kv_split`` bypasses the greedy KV split entirely: the KV
     class is removed from the capacity pass (its tier occupancy is instead
     pre-charged against each tier's capacity) and the runtime-observed
     split is applied on top."""
+    if kv_shards < 1:
+        raise ValueError(f"kv_shards ({kv_shards}) must be >= 1")
     ctx = prefill_len + decode_len
     fp = resident_bytes(cfg, ctx, n_concurrent, dtype_bytes)
     fp[TC.KV] = fp[TC.KV] * kv_dedup_factor(
         n_concurrent, prefill_len, decode_len,
-        shared_prefix_len=shared_prefix_len, share_group=share_group)
+        shared_prefix_len=shared_prefix_len,
+        share_group=share_group) / kv_shards
     if kv_split is not None:
         # charge the pinned KV residency against the tiers it occupies so
         # co-resident classes see the reduced capacity, then keep the KV

@@ -42,6 +42,16 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8,
                     help="continuous scheduler slot count")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="head-shard the paged KV pool and attention "
+                         "kernels over this many devices (DESIGN.md SS16; "
+                         "requires --scheduler continuous and "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N on the CPU rig)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialize the prefill and decode streams onto "
+                         "one virtual queue (the pre-SS16 loop) instead "
+                         "of overlapping them")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="tokens per prefill chunk (continuous scheduler; "
                          "default 2 pages, min 32)")
@@ -144,7 +154,8 @@ def main() -> None:
                       spec_mode=args.spec_mode, spec_k=args.spec_k,
                       draft_cfg=draft_cfg, temperature=args.temperature,
                       top_k=args.top_k, top_p=args.top_p,
-                      sample_seed=args.seed)
+                      sample_seed=args.seed,
+                      shards=args.shards, overlap=not args.no_overlap)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
@@ -169,8 +180,10 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} sched={args.scheduler} "
           f"kv={args.kv_policy} reqs={s.requests} "
           f"prefill={s.prefill_s*1e3:.0f}ms decode={s.decode_s*1e3:.0f}ms "
+          f"serve={s.serve_s*1e3:.0f}ms "
           f"steps={s.decode_steps} lookahead={args.decode_lookahead} "
-          f"syncs={s.host_syncs} preempt={s.preemptions} TPS={s.tps:.1f}")
+          f"syncs={s.host_syncs} preempt={s.preemptions} TPS={s.tps:.1f} "
+          f"shards={args.shards} overlap={not args.no_overlap}")
     if args.scheduler == "continuous":
         print(f"[serve] prefill_toks={s.prefill_tokens_computed} "
               f"cached={s.cached_prefix_tokens} deduped={s.pages_deduped} "

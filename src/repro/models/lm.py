@@ -60,6 +60,11 @@ class RuntimeOptions:
     seq_shard_mesh: object = None
     # shard-local EP MoE dispatch (SSPerf iteration 4)
     moe_shard_map_mesh: object = None
+    # head-sharded paged serving (DESIGN.md SS16): a jax Mesh with a
+    # "model" axis partitions the paged KV pool's KV-head dim; the paged
+    # attend runs per shard under shard_map and all-gathers head outputs
+    # (bitwise identical to single-device). None: replicated paged path.
+    kv_shard_mesh: object = None
 
     @property
     def jdtype(self):
@@ -509,6 +514,75 @@ def _quantize_with(val, scale):
                               / scale[..., :, None]), -127, 127)
 
 
+def _head_shards(opts: RuntimeOptions, n_kv_heads: int) -> int:
+    """Shard count of ``opts.kv_shard_mesh`` when it head-divides, else 0."""
+    if opts.kv_shard_mesh is None:
+        return 0
+    from repro.kernels import sharded as ksh
+    return ksh.head_shards(opts.kv_shard_mesh, n_kv_heads)
+
+
+def _chunk_attend(q, kp, vp, ksc, vsc, page_table, start, n_valid, *,
+                  cfg: ArchConfig, opts: RuntimeOptions):
+    """Attend a (B, C, H', hd) query chunk over pooled pages.
+
+    Head counts come from the operands, not ``cfg``, so the same body
+    serves the replicated pool AND one head shard of it (the per-shard
+    body under ``kernels.sharded.sharded_attend``). ``ksc``/``vsc`` are
+    the int8 per-head scales matching kp/vp's head slice, or None."""
+    B, C, H, hd = q.shape
+    Hkv, ps = kp.shape[2], kp.shape[1]
+    n_pp = page_table.shape[1]
+    quant = ksc is not None
+    out = None
+    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
+        from repro.kernels import ops as kops
+        if jnp.ndim(start) == 1:
+            # per-sequence window start => speculative-verify entry (SS14)
+            out = kops.try_spec_verify_attention(
+                q, kp, vp, page_table, start,
+                n_valid - jnp.asarray(start, jnp.int32), scale=hd ** -0.5,
+                k_scale=ksc, v_scale=vsc)
+        else:
+            out = kops.try_chunk_prefill_attention(
+                q, kp, vp, page_table, start, n_valid, scale=hd ** -0.5,
+                k_scale=ksc, v_scale=vsc)
+    if out is None:
+        # XLA path: gather the pages densely, causal-mask by position
+        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        if quant:
+            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
+            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
+        else:
+            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
+        start_v = jnp.asarray(start, jnp.int32)
+        if start_v.ndim == 0:
+            out = cm.attention(q, kd, vd, mask_kind="causal", q_offset=start,
+                               kv_valid=n_valid, softcap=cfg.logit_softcap,
+                               impl="xla")
+        else:
+            # per-sequence window start (speculative verify, SS14):
+            # cm.attention's q_offset is scalar-only, so build the (B, C, L)
+            # mask explicitly — same numerics as its small path otherwise
+            L = n_pp * ps
+            group = H // Hkv
+            qpos = start_v[:, None] + jnp.arange(C)[None, :]
+            qpos = jnp.minimum(qpos, n_valid[:, None] - 1)   # clip pad rows
+            m = jnp.arange(L)[None, None, :] <= qpos[:, :, None]
+            qg = q.reshape(B, C, Hkv, group, hd)
+            s = jnp.einsum("bshgd,blhd->bshgl", qg, kd,
+                           preferred_element_type=jnp.float32) * (hd ** -0.5)
+            if cfg.logit_softcap:
+                s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+            s = jnp.where(m[:, :, None, None, :], s, cm.NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bshgl,blhd->bshgd", pr.astype(vd.dtype), vd,
+                             preferred_element_type=jnp.float32)
+            out = out.reshape(B, C, H, hd).astype(q.dtype)
+    return out
+
+
 def prefill_paged(cfg: ArchConfig, params, tokens, cache, page_table,
                   true_len, opts: RuntimeOptions = RuntimeOptions(), *,
                   calibrate: bool = False):
@@ -607,52 +681,28 @@ def _paged_chunk_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
     vp = (vp.reshape(P * ps, Hkv, hd).at[flat]
           .set(v_store.reshape(B * C, Hkv, hd)).reshape(vp.shape))
 
-    out = None
-    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
-        from repro.kernels import ops as kops
-        if jnp.ndim(start) == 1:
-            # per-sequence window start => speculative-verify entry (SS14)
-            out = kops.try_spec_verify_attention(
-                q, kp, vp, page_table, start,
-                n_valid - jnp.asarray(start, jnp.int32), scale=hd ** -0.5,
-                k_scale=ksc, v_scale=vsc)
-        else:
-            out = kops.try_chunk_prefill_attention(
-                q, kp, vp, page_table, start, n_valid, scale=hd ** -0.5,
-                k_scale=ksc, v_scale=vsc)
-    if out is None:
-        # XLA path: gather the pages densely, causal-mask by position
-        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
-        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
-        if quant:
-            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
-            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
-        else:
-            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
-        start_v = jnp.asarray(start, jnp.int32)
-        if start_v.ndim == 0:
-            out = cm.attention(q, kd, vd, mask_kind="causal", q_offset=start,
-                               kv_valid=n_valid, softcap=cfg.logit_softcap,
-                               impl="xla")
-        else:
-            # per-sequence window start (speculative verify, SS14):
-            # cm.attention's q_offset is scalar-only, so build the (B, C, L)
-            # mask explicitly — same numerics as its small path otherwise
-            L = n_pp * ps
-            group = H // Hkv
-            qpos = start_v[:, None] + jnp.arange(C)[None, :]
-            qpos = jnp.minimum(qpos, n_valid[:, None] - 1)   # clip pad rows
-            m = jnp.arange(L)[None, None, :] <= qpos[:, :, None]
-            qg = q.reshape(B, C, Hkv, group, hd)
-            s = jnp.einsum("bshgd,blhd->bshgl", qg, kd,
-                           preferred_element_type=jnp.float32) * (hd ** -0.5)
-            if cfg.logit_softcap:
-                s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
-            s = jnp.where(m[:, :, None, None, :], s, cm.NEG_INF)
-            pr = jax.nn.softmax(s, axis=-1)
-            out = jnp.einsum("bshgl,blhd->bshgd", pr.astype(vd.dtype), vd,
-                             preferred_element_type=jnp.float32)
-            out = out.reshape(B, C, H, hd).astype(q.dtype)
+    n_sh = _head_shards(opts, Hkv)
+    if n_sh:
+        # head-sharded attend (SS16): the pool/q head dims partition over
+        # the mesh, the scatter above already ran shard-wise under GSPMD,
+        # and the per-shard body below is this very function's replicated
+        # path on an Hkv/N slice — bitwise identical after the gather
+        from repro.kernels import sharded as ksh
+
+        def attend(q_l, kp_l, vp_l, ks_l, vs_l, pt, st, nv):
+            return _chunk_attend(q_l, kp_l, vp_l,
+                                 ks_l if quant else None,
+                                 vs_l if quant else None,
+                                 pt, st, nv, cfg=cfg, opts=opts)
+        ones = jnp.ones((Hkv,), jnp.float32)
+        out = ksh.sharded_attend(
+            opts.kv_shard_mesh, attend, q, kp, vp,
+            ksc if quant else ones, vsc if quant else ones,
+            (page_table, jnp.asarray(start, jnp.int32), n_valid),
+            q_head_axis=2)
+    else:
+        out = _chunk_attend(q, kp, vp, ksc, vsc, page_table, start,
+                            n_valid, cfg=cfg, opts=opts)
     out = cm.dense(p["wo"], out.reshape(B, C, H * hd))
     new_cache = {"k": kp, "v": vp}
     if quant:
@@ -711,6 +761,38 @@ def copy_pages(cache, pairs):
     return {"stack": new}
 
 
+def _decode_attend(q, kp, vp, ksc, vsc, page_table, valid, *,
+                   cfg: ArchConfig, opts: RuntimeOptions):
+    """Attend a (B, 1, H', hd) single-position query over pooled pages.
+
+    Head counts come from the operands (see ``_chunk_attend``) so the
+    body runs unchanged on one head shard of the pool."""
+    B, _, H, hd = q.shape
+    Hkv, ps = kp.shape[2], kp.shape[1]
+    n_pp = page_table.shape[1]
+    quant = ksc is not None
+    out = None
+    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
+        from repro.kernels import ops as kops
+        out = kops.try_paged_decode_attention(
+            q[:, 0], kp, vp, page_table, valid, scale=hd ** -0.5,
+            k_scale=ksc, v_scale=vsc)
+        if out is not None:
+            out = out[:, None]                          # (B, 1, H, hd)
+    if out is None:
+        # XLA path: gather the sequence's pages densely, mask by seq_lens
+        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
+        if quant:
+            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
+            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
+        else:
+            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
+        out = cm.attention(q, kd, vd, mask_kind="full", kv_valid=valid,
+                           softcap=cfg.logit_softcap, impl="xla")
+    return out
+
+
 def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
                        cache_layer, seq_lens, page_table):
     """Single-token attention against pooled KV pages. x: (B, 1, d)."""
@@ -732,6 +814,7 @@ def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
         k_store = _quantize_with(k[:, 0], ksc[None]).astype(jnp.int8)
         v_store = _quantize_with(v[:, 0], vsc[None]).astype(jnp.int8)
     else:
+        ksc = vsc = None
         k_store, v_store = k[:, 0].astype(kp.dtype), v[:, 0].astype(vp.dtype)
 
     # write the new token's KV at (page_table[b, len//ps], len % ps); the
@@ -743,26 +826,23 @@ def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
     vp = vp.reshape(P * ps, Hkv, hd).at[flat].set(v_store).reshape(vp.shape)
     valid = seq_lens + 1
 
-    out = None
-    if opts.attn_impl == "pallas" and not cfg.logit_softcap:
-        from repro.kernels import ops as kops
-        out = kops.try_paged_decode_attention(
-            q[:, 0], kp, vp, page_table, valid, scale=hd ** -0.5,
-            k_scale=cache_layer.get("k_scale"),
-            v_scale=cache_layer.get("v_scale"))
-        if out is not None:
-            out = out[:, None]                          # (B, 1, H, hd)
-    if out is None:
-        # XLA path: gather the sequence's pages densely, mask by seq_lens
-        kd = kp[page_table].reshape(B, n_pp * ps, Hkv, hd)
-        vd = vp[page_table].reshape(B, n_pp * ps, Hkv, hd)
-        if quant:
-            kd = kd.astype(q.dtype) * ksc[None, None, :, None].astype(q.dtype)
-            vd = vd.astype(q.dtype) * vsc[None, None, :, None].astype(q.dtype)
-        else:
-            kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
-        out = cm.attention(q, kd, vd, mask_kind="full", kv_valid=valid,
-                           softcap=cfg.logit_softcap, impl="xla")
+    n_sh = _head_shards(opts, Hkv)
+    if n_sh:
+        from repro.kernels import sharded as ksh
+
+        def attend(q_l, kp_l, vp_l, ks_l, vs_l, pt, vl):
+            return _decode_attend(q_l, kp_l, vp_l,
+                                  ks_l if quant else None,
+                                  vs_l if quant else None,
+                                  pt, vl, cfg=cfg, opts=opts)
+        ones = jnp.ones((Hkv,), jnp.float32)
+        out = ksh.sharded_attend(
+            opts.kv_shard_mesh, attend, q, kp, vp,
+            ksc if quant else ones, vsc if quant else ones,
+            (page_table, valid), q_head_axis=2)
+    else:
+        out = _decode_attend(q, kp, vp, ksc, vsc, page_table, valid,
+                             cfg=cfg, opts=opts)
     out = cm.dense(p["wo"], out.reshape(B, 1, H * hd))
     new_cache = {"k": kp, "v": vp}
     if quant:

@@ -6,11 +6,12 @@ from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
 from repro.serving.metrics import latency_summary_ms, pct_ms, percentile
 from repro.serving.scheduler import (AdaptiveSpecK, ContinuousScheduler,
                                      Request)
+from repro.serving.streams import VirtualStream
 from repro.serving.trace import PHASES, TraceRecorder, validate_chrome_trace
 
 __all__ = ["ModelDraft", "NGramDraft", "ServeEngine", "ServeStats",
            "PageAllocationError", "PagedKVManager", "PrefixAllocation",
            "SimulatedTierDevice", "TierBudget", "page_bytes", "AdaptiveSpecK",
            "ContinuousScheduler", "Request", "PHASES", "TraceRecorder",
-           "validate_chrome_trace", "latency_summary_ms", "pct_ms",
-           "percentile"]
+           "VirtualStream", "validate_chrome_trace", "latency_summary_ms",
+           "pct_ms", "percentile"]

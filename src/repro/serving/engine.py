@@ -49,6 +49,7 @@ from repro.serving.kv_manager import (PagedKVManager, SimulatedTierDevice,
                                       TierBudget, page_bytes)
 from repro.serving.scheduler import (PREFILLING, RUNNING, AdaptiveSpecK,
                                      ContinuousScheduler, Request)
+from repro.serving.streams import VirtualStream
 from repro.serving.trace import DECODE, DRAFT, STALL, TraceRecorder
 
 
@@ -72,6 +73,11 @@ def _pad_pow2(items: List, pad_item) -> List:
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # serve makespan on the virtual stream clock (SS16): max over the
+    # prefill/decode streams' horizons, summed across serve() calls. With
+    # overlap it is LESS than prefill_s + decode_s — that gap is the
+    # overlapped time, and what tps prices.
+    serve_s: float = 0.0
     new_tokens: int = 0
     requests: int = 0
     decode_steps: int = 0
@@ -122,8 +128,12 @@ class ServeStats:
 
     @property
     def tps(self) -> float:
-        """Decode tokens/sec over the full request (paper's metric)."""
-        t = self.prefill_s + self.decode_s
+        """Decode tokens/sec over the full request (paper's metric):
+        tokens over the stream-clock makespan when one was recorded
+        (continuous engine), else over summed phase time (static
+        engine, where the two coincide)."""
+        t = (self.serve_s if self.serve_s > 0
+             else self.prefill_s + self.decode_s)
         return self.new_tokens / t if t > 0 else 0.0
 
     def _pct(self, xs: List[float], q: float) -> float:
@@ -160,10 +170,39 @@ class ServeEngine:
                  hbs_latency_us: Optional[float] = None,
                  spec_mode: str = "off", spec_k: int = 4, draft_cfg=None,
                  draft_params=None, temperature: float = 0.0,
-                 top_k: int = 0, top_p: float = 1.0, sample_seed: int = 0):
+                 top_k: int = 0, top_p: float = 1.0, sample_seed: int = 0,
+                 shards: int = 1, overlap: bool = True):
+        import dataclasses
         if kv_policy == "int8":
-            import dataclasses
             opts = dataclasses.replace(opts, cache_dtype="int8")
+        # ---- head-sharded multi-device serving (DESIGN.md SS16) ---- #
+        # an N-way mesh partitions the paged pool's KV-head dim; each
+        # device runs the unchanged kernels on its Hkv/N head slice and
+        # the per-head outputs are all-gathered, so outputs stay bitwise
+        # identical to shards=1 while per-device page bytes shrink by N
+        if shards < 1:
+            raise ValueError(f"shards ({shards}) must be >= 1")
+        self.mesh = None
+        if shards > 1:
+            if scheduler != "continuous":
+                raise ValueError("head-sharded serving (shards > 1) runs "
+                                 "on the paged continuous engine; use "
+                                 "scheduler='continuous'")
+            if cfg.n_kv_heads % shards:
+                raise ValueError(f"shards ({shards}) must divide "
+                                 f"n_kv_heads ({cfg.n_kv_heads}) for head "
+                                 f"sharding")
+            ndev = len(jax.devices())
+            if ndev < shards:
+                raise ValueError(
+                    f"shards={shards} needs {shards} devices but jax sees "
+                    f"{ndev}; on CPU export XLA_FLAGS=--xla_force_host_"
+                    f"platform_device_count={shards} before importing jax")
+            self.mesh = jax.make_mesh((shards,), ("model",),
+                                      devices=jax.devices()[:shards])
+            opts = dataclasses.replace(opts, kv_shard_mesh=self.mesh)
+        self.shards = shards
+        self.overlap = overlap
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if scheduler == "continuous":
@@ -241,10 +280,14 @@ class ServeEngine:
         self.kv_dtype_bytes = (jnp.dtype(opts.cache_dtype).itemsize
                                if opts.cache_dtype else opts.jdtype.itemsize)
         self.page_nbytes = page_bytes(cfg, page_size, self.kv_dtype_bytes)
+        # per-device page slice (SS16): each shard holds Hkv/N heads of
+        # every page, so capacity AND migration traffic are charged at
+        # page_bytes/N per device — the constrained resource
+        self.page_nbytes_shard = self.page_nbytes / shards
         self.tier_budget = (None if hierarchy is None else
                             TierBudget.from_hierarchy(
                                 hierarchy, cfg, page_size,
-                                self.kv_dtype_bytes))
+                                self.kv_dtype_bytes, shards=shards))
         # HBS offload timing: migrations between the fast KV tiers and the
         # budget's slowest tier are charged in virtual time (DESIGN.md
         # SS13). ``hbs_gbps``/``hbs_latency_us`` override the hierarchy's
@@ -426,19 +469,33 @@ class ServeEngine:
         ps, n_pp = self.page_size, self.n_pages_per_seq
         B = self.max_batch
         C = self.prefill_chunk
-        # virtual clock (SS13): wall time plus every simulated migration
-        # stall absorbed so far, so TTFT/ITL/TPS price the HBS envelope.
-        # Defined first: every layer below stamps events on this clock.
-        voffset = 0.0
+        # virtual stream clock (SS13/SS16), t = 0 at serve start: a
+        # prefill worker and a decode worker, each an in-order
+        # ``VirtualStream`` charging its ops' measured wall time plus any
+        # absorbed migration stall to its own horizon. With overlap the
+        # streams advance independently — chunked prefill of admitted
+        # requests proceeds in virtual time while the fused decode block
+        # of running requests is in flight — and the serve makespan is
+        # ``max(free)``; without, both names bind one stream and every op
+        # serializes (the pre-SS16 loop). TTFT/ITL/TPS, the trace and the
+        # tier device's DMA horizons all read this clock.
+        pstream = VirtualStream("prefill")
+        dstream = VirtualStream("decode") if self.overlap else pstream
+        # the prefill -> decode ready queue: rid -> virtual instant its
+        # last prefill chunk finished (set at finish_prefill); a decode
+        # block only includes requests ready by its start time
+        decode_ready: Dict[int, float] = {}
+        # a preemption victim's re-prefill cannot begin before the
+        # (decode-stream) instant of the reservation that evicted it
+        svc_floor: Dict[int, float] = {}
+        # scheduler/drafter clock: admissions stamp at the lagging
+        # stream's horizon (never later than any upcoming op start);
+        # during a decode-side reservation the engine pins it to the
+        # block's start so preemption instants land at eviction time
+        sched_t = [0.0]
 
         def now() -> float:
-            return time.perf_counter() + voffset
-
-        def absorb_stall(s: float) -> None:
-            nonlocal voffset
-            if s > 0:
-                voffset += s
-                self.stats.stall_s += s
+            return max(sched_t[0], min(pstream.free, dstream.free))
 
         # structured trace (SS15): one recorder per serve, threaded through
         # the scheduler / KV manager / tier device / drafter; ServeStats is
@@ -461,7 +518,7 @@ class ServeEngine:
         kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget,
                             enable_prefix_cache=self.prefix_cache,
                             dtype_bytes=self.kv_dtype_bytes,
-                            page_nbytes=self.page_nbytes,
+                            page_nbytes=self.page_nbytes_shard,
                             tier_device=device, tracer=trace)
         self.kv_manager = kv
         sched = ContinuousScheduler(kv, B, prefill_chunk=C,
@@ -484,16 +541,28 @@ class ServeEngine:
         if draft is not None:
             draft.tracer, draft.clock = trace, now
         cache = init_paged_cache(self.cfg, kv.n_pages, ps, self.opts)
+        if self.mesh is not None:
+            # land the pool head-sharded up front so the jitted shard_map
+            # callers never reshard it (the page scatter is elementwise on
+            # the unsharded pages axis; GSPMD keeps the layout)
+            from repro.sharding import rules
+            from jax.sharding import NamedSharding
+            cache = jax.device_put(cache, jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s),
+                rules.paged_cache_pspecs(cache, self.mesh)))
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
 
-        def stall_barrier(reqs: List[Request], t0: float) -> None:
+        def stall_barrier(reqs: List[Request], t0: float,
+                          track: str) -> float:
             """Fetch-wait barrier with per-request attribution: the batch
-            absorbs the max wait, each request is charged its OWN pages'
-            wait (SS13 deferred item)."""
+            absorbs the max wait into the issuing stream's next op (the
+            caller folds the return into the op's duration), each request
+            is charged its OWN pages' wait (SS13 deferred item)."""
             per: Dict[int, float] = {}
             s = kv.residency_stall([r.rid for r in reqs], t0, per_seq=per)
-            absorb_stall(s)
-            trace.absorbed_stall(t0, s)
+            if s > 0:
+                self.stats.stall_s += s
+            trace.absorbed_stall(t0, s, track=track)
             for r in reqs:
                 v = per.get(r.rid, 0.0)
                 if v > 0:
@@ -501,6 +570,7 @@ class ServeEngine:
                     self.stats.stall_by_rid[r.rid] = (
                         self.stats.stall_by_rid.get(r.rid, 0.0) + v)
                     trace.span(r.rid, STALL, t0, t0 + v)
+            return s
 
         for i, r in enumerate(requests):
             total = len(r) + max_new_tokens
@@ -518,19 +588,18 @@ class ServeEngine:
             return (req.remaining <= 0
                     or (self.eos_id is not None and tok == self.eos_id))
 
-        def emit(req: Request, tok: int, at: Optional[float] = None) -> float:
-            # ``at``: attributed emission time — fused decode blocks spread
-            # the block's wall time evenly over the tokens it produced
-            t = now() if at is None else at
+        def emit(req: Request, tok: int, at: float) -> float:
+            # ``at``: attributed emission time on the issuing stream —
+            # fused blocks spread their span evenly over produced tokens
             if not req.out:                      # very first token: TTFT
-                self.stats.ttft.append(t - req.t_submit)
+                self.stats.ttft.append(at - req.t_submit)
             elif req.t_last:
-                self.stats.itl.append(t - req.t_last)
-            req.t_last = t
+                self.stats.itl.append(at - req.t_last)
+            req.t_last = at
             req.out.append(tok)
             self.stats.new_tokens += 1
-            trace.token(req.rid, t, tok)
-            return t
+            trace.token(req.rid, at, tok)
+            return at
 
         def note_peak():
             # snapshot the landed-page split whenever occupancy peaks —
@@ -563,7 +632,7 @@ class ServeEngine:
                 kv.prefetch_seqs([r.rid for _, r in admitted], now())
             apply_copies()       # COW copies must land before any KV write
 
-            # ---- chunked prefill, bounded by the per-step budget ---- #
+            # ---- prefill worker: chunked, bounded by the budget ---- #
             budget = sched.prefill_budget
             for slot, req in sched.prefilling():
                 if budget < C:
@@ -577,23 +646,26 @@ class ServeEngine:
                     toks[0, :n_real] = pf[start:start + n_real]
                     pt = kv.table_row(req.rid, n_pp)[None]
                     self._chunk_shapes.add(((1, C), not calibrated))
-                    t0 = now()
+                    t0 = pstream.start(svc_floor.get(req.rid, 0.0))
                     # cached prefix pages may be offload-resident: wait
                     # out their migration before the chunk launches
-                    stall_barrier([req], t0)
+                    s = stall_barrier([req], t0, "prefill")
+                    w0 = time.perf_counter()
                     logits, cache = self._prefill_chunk(
                         self.params, jnp.asarray(toks), cache,
                         jnp.asarray(pt), jnp.int32(start),
                         jnp.asarray([start + n_real], jnp.int32),
                         calibrate=not calibrated)
                     logits.block_until_ready()
+                    dw = time.perf_counter() - w0
                     self.stats.host_syncs += 1
                     calibrated = True
-                    t1 = now()
+                    t1 = pstream.commit(t0, s + dw)
                     self.stats.prefill_s += t1 - t0
                     trace.engine_span(
                         "prefill_chunk", t0, t1,
-                        {"rid": req.rid, "tokens": [start, start + n_real]})
+                        {"rid": req.rid, "tokens": [start, start + n_real]},
+                        track="prefill")
                     # recompute/prefill split by the request's computed
                     # high-water mark (re-prefill after preemption)
                     trace.prefill_span(req.rid, t0, t1, start,
@@ -608,6 +680,7 @@ class ServeEngine:
                                        n_valid=req.n_prefilled)
                     if req.n_prefilled >= F:
                         sched.finish_prefill(slot)
+                        decode_ready[req.rid] = t1   # decodable from t1
                         if self.temperature > 0:
                             # first token of the request: sampled from the
                             # (rid, 0) key so it is schedule-independent
@@ -619,7 +692,7 @@ class ServeEngine:
                         else:
                             tok = int(np.argmax(
                                 np.asarray(logits[0, F - 1 - start])))
-                        t_e = emit(req, tok)
+                        t_e = emit(req, tok, t1)
                         if finished(req, tok):
                             sched.retire(slot)
                             trace.retire(req.rid, t_e)
@@ -633,38 +706,58 @@ class ServeEngine:
                     continue     # prefills advance / admissions retry
                 break
 
+            # ---- decode worker: one block over the READY running slots.
+            # The block starts no earlier than the earliest ready instant
+            # (so at least one request always qualifies); requests whose
+            # prefill finished after that sit the block out — an inactive
+            # slot with zero quota, which the device neither samples nor
+            # writes for, so sitting out delays a request's tokens
+            # without changing them (per-slot determinism) — and join the
+            # next block once the decode stream catches up. Serialized
+            # (overlap=False), the shared stream's horizon is past every
+            # ready instant and everyone always qualifies.
+            t0 = dstream.start(min(decode_ready.get(r.rid, 0.0)
+                                   for _, r in running))
+            parts = [(s, r) for s, r in running
+                     if decode_ready.get(r.rid, 0.0) <= t0]
+
             if self.spec_mode != "off":
                 # ==== speculative decode block (DESIGN.md SS14) ==== #
                 # draft proposes up to k tokens per request; ONE verify
                 # pass streams weights+KV once and lands n_acc+1 tokens
-                t0 = now()
                 items = [(req, min(adaptive.k_for(req), req.remaining - 1))
-                         for _, req in running]
+                         for _, req in parts]
+                w0 = time.perf_counter()
                 props = draft.propose_all(items)
-                td = now()
+                td = dstream.commit(t0, time.perf_counter() - w0)
                 trace.engine_span("spec_propose", t0, td,
-                                  {"n_seqs": len(items)})
-                for _, r in running:
+                                  {"n_seqs": len(items)}, track="decode")
+                for _, r in parts:
                     # the whole batch waits out the proposal pass
                     trace.span(r.rid, DRAFT, t0, td)
                 # reserve draft_len+1 KV writes per slot, all-or-nothing;
                 # LIFO preemption may evict ANY slot — diff the full table
-                before = set(sched.slots)
-                for slot, req in running:
+                before = dict(sched.slots)
+                sched_t[0] = td       # evictions stamp at reservation time
+                for slot, req in parts:
                     if slot in sched.slots:
                         sched.reserve_lookahead(
                             slot, len(props.get(req.rid, ())) + 1)
-                self.stats.preemptions += sum(
-                    1 for s in before if s not in sched.slots)
-                running = [(s, r) for s, r in running
-                           if s in sched.slots and r.state == RUNNING]
+                sched_t[0] = 0.0
+                evicted = [r for s, r in before.items()
+                           if s not in sched.slots]
+                for r in evicted:
+                    svc_floor[r.rid] = td
+                self.stats.preemptions += len(evicted)
+                parts = [(s, r) for s, r in parts
+                         if s in sched.slots and r.state == RUNNING]
                 apply_copies()
                 note_peak()
-                if not running:
+                if not parts:
                     continue
                 # clamp the verify window to the largest live draft,
                 # rounded up to a power of two (O(log K) compiled shapes)
-                max_dl = max(len(props.get(r.rid, ())) for _, r in running)
+                max_dl = max(len(props.get(r.rid, ())) for _, r in parts)
                 n_tok = min(self.spec_k + 1, _next_pow2(max_dl + 1))
                 tokens = np.zeros((B, n_tok), np.int32)
                 draft_len = np.zeros((B,), np.int32)
@@ -672,7 +765,7 @@ class ServeEngine:
                 tables = np.zeros((B, n_pp), np.int32)
                 rids = np.zeros((B,), np.int32)
                 emitted = np.zeros((B,), np.int32)
-                for slot, req in running:
+                for slot, req in parts:
                     pr = list(props.get(req.rid, ()))[:n_tok - 1]
                     tokens[slot, 0] = req.out[-1]
                     if pr:
@@ -685,18 +778,20 @@ class ServeEngine:
                 keys = self._block_keys(jnp.asarray(rids),
                                         jnp.asarray(emitted))
                 self._decode_shapes.add(("spec", B, n_tok))
-                tb = now()
-                stall_barrier([r for _, r in running], tb)
+                tb = dstream.start()
+                s = stall_barrier([r for _, r in parts], tb, "decode")
+                w0 = time.perf_counter()
                 out, n_acc, _, cache = self._spec_verify(
                     self.params, jnp.asarray(tokens),
                     jnp.asarray(draft_len), jnp.asarray(seq_lens),
                     jnp.asarray(tables), cache, keys)
                 out_np = np.asarray(out)
                 nacc_np = np.asarray(n_acc)
-                tv = now()
+                tv = dstream.commit(tb, s + time.perf_counter() - w0)
                 dt = tv - t0
                 trace.engine_span("spec_verify", tb, tv,
-                                  {"n_tok": n_tok, "n_seqs": len(running)})
+                                  {"n_tok": n_tok, "n_seqs": len(parts)},
+                                  track="decode")
                 self.stats.host_syncs += 1
                 self.stats.decode_s += dt
                 self.stats.decode_steps += 1    # one streaming pass
@@ -706,7 +801,7 @@ class ServeEngine:
                 # pass wall time is attributed evenly over ACCEPTED tokens
                 # (the whole point: ITL shrinks with acceptance); rejected
                 # suffix pages roll back via commit_speculative
-                for slot, req in running:
+                for slot, req in parts:
                     dl = int(draft_len[slot])
                     acc = int(nacc_np[slot])
                     self.stats.draft_proposed += dl
@@ -739,18 +834,25 @@ class ServeEngine:
                 # LIFO preemption may evict ANY slot, including a
                 # just-admitted PREFILLING one — diff the full slot table
                 K = self.decode_lookahead
-                before = set(sched.slots)
-                for slot, req in running:
+                before = dict(sched.slots)
+                sched_t[0] = t0       # evictions stamp at the block start
+                for slot, req in parts:
                     if slot in sched.slots:     # may have been preempted
                         sched.reserve_lookahead(slot, min(K, req.remaining))
-                self.stats.preemptions += sum(
-                    1 for s in before if s not in sched.slots)
-                running = [(s, r) for s, r in running
-                           if s in sched.slots and r.state == RUNNING]
+                sched_t[0] = 0.0
+                evicted = [r for s, r in before.items()
+                           if s not in sched.slots]
+                for r in evicted:
+                    svc_floor[r.rid] = t0
+                self.stats.preemptions += len(evicted)
+                parts = [(s, r) for s, r in parts
+                         if s in sched.slots and r.state == RUNNING]
                 apply_copies()   # COW from reservations lands pre-scan
                 note_peak()
+                if not parts:
+                    continue
 
-                # ---- one fused K-step decode block over RUNNING slots:
+                # ---- one fused K-step decode block over the ready slots:
                 # sampling, EOS latching, and length advance happen on
                 # device; one host sync per (B, K) block (DESIGN.md SS12)
                 tokens = np.zeros((B,), np.int32)
@@ -758,7 +860,7 @@ class ServeEngine:
                 tables = np.zeros((B, n_pp), np.int32)
                 quota = np.zeros((B,), np.int32)
                 inactive = np.ones((B,), bool)
-                for slot, req in running:
+                for slot, req in parts:
                     tokens[slot] = req.out[-1]
                     seq_lens[slot] = kv.seq_len(req.rid)  # write position
                     tables[slot] = kv.table_row(req.rid, n_pp)
@@ -769,16 +871,16 @@ class ServeEngine:
                 # short instead of decoding K wasted pad steps
                 n_steps = min(K, _next_pow2(int(quota.max())))
                 self._decode_shapes.add(("paged", B, n_steps))
-                t0 = now()
                 # fetch-wait barrier (SS13): every page this block attends
                 # over must be fast-resident — or its streamed read landed
                 # — before the kernel launches; a block that outruns its
                 # prefetch absorbs the residual as recorded stall
-                stall_barrier([r for _, r in running], t0)
+                s = stall_barrier([r for _, r in parts], t0, "decode")
+                w0 = time.perf_counter()
                 if self.temperature > 0:
                     rids = np.zeros((B,), np.int32)
                     emitted = np.zeros((B,), np.int32)
-                    for slot, req in running:
+                    for slot, req in parts:
                         rids[slot] = req.rid
                         emitted[slot] = len(req.out)
                     keys = self._block_keys(jnp.asarray(rids),
@@ -795,18 +897,18 @@ class ServeEngine:
                         n_steps=n_steps, done=jnp.asarray(inactive),
                         quota=jnp.asarray(quota))
                 blk_np = np.asarray(blk)
-                tv = now()
+                tv = dstream.commit(t0, s + time.perf_counter() - w0)
                 dt = tv - t0
                 trace.engine_span("decode_block", t0, tv,
                                   {"n_steps": n_steps,
-                                   "n_seqs": len(running)})
+                                   "n_seqs": len(parts)}, track="decode")
                 self.stats.host_syncs += 1
                 self.stats.decode_s += dt
                 self.stats.decode_steps += n_steps
 
                 # distribute the block: per-token ITL is attributed evenly
                 # from the block wall time; retire/commit at boundaries
-                for slot, req in running:
+                for slot, req in parts:
                     fin = False
                     n_written = 0            # device-side KV writes taken
                     for j in range(int(quota[slot])):
@@ -827,10 +929,14 @@ class ServeEngine:
             # launch: the next block reads the same sequences' pages, so
             # any of them demoted to (or streamed from) the offload tier
             # migrates while this block was computing — at generous HBS
-            # bandwidth the next barrier then sees zero stall
+            # bandwidth the next barrier then sees zero stall. When the
+            # fetch channel would otherwise sit idle, the lookahead arg
+            # additionally promotes the deepest still-prefilling
+            # sequence's pages (queue-aware prefetch, ROADMAP item 5)
             cont = [r.rid for s, r in running if s in sched.slots]
             if cont:
-                kv.prefetch_seqs(cont, t0)
+                kv.prefetch_seqs(cont, t0, lookahead_seqs=[
+                    r.rid for _, r in sched.prefilling()])
 
         self.stats.requests += len(requests)
         self.stats.cached_prefix_tokens += kv.dedup_tokens
@@ -846,10 +952,13 @@ class ServeEngine:
         self.stats.decode_compiles = len(self._decode_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"
         assert kv.n_used == 0, "page leak: retired sequences kept pages"
+        # serve makespan: the later stream's horizon (== the serialized
+        # sum when overlap is off; less when prefill hid behind decode)
+        self.stats.serve_s += max(pstream.free, dstream.free)
         # close the trace and audit the aggregate counters against it:
         # phase sums == e2e per request, stall totals and samples match
         # this serve's ServeStats deltas (raises on drift — SS15)
-        trace.finalize(now())
+        trace.finalize(max(pstream.free, dstream.free))
         self.trace_report = trace.reconcile(
             stall_s=self.stats.stall_s - snap_stall,
             ttft=self.stats.ttft[snap_ttft:],

@@ -137,7 +137,8 @@ class TierBudget:
                        dtype_bytes: int = 2,
                        kv_tiers: Sequence[str] = DEFAULT_KV_TIERS,
                        reserve_bytes: Dict[str, float] = None,
-                       uncapped_pages: Optional[int] = None) -> "TierBudget":
+                       uncapped_pages: Optional[int] = None,
+                       shards: int = 1) -> "TierBudget":
         """Pages per tier from the hierarchy's KV-eligible capacities.
 
         ``reserve_bytes`` subtracts non-KV residency (weights, activations)
@@ -145,8 +146,21 @@ class TierBudget:
         of ``workload.resident_bytes`` routed through a placement. A tier
         with ``capacity=None`` has no physical page count; admission checks
         built on ``total_pages`` would be meaningless, so it raises unless
-        the caller supplies an explicit ``uncapped_pages`` cap for it."""
-        pb = page_bytes(cfg, page_size, dtype_bytes)
+        the caller supplies an explicit ``uncapped_pages`` cap for it.
+
+        ``shards``: head-sharded serving (DESIGN.md SS16). Each device of
+        an N-way mesh holds 1/N of every page (its Hkv/N head slice), so
+        the hierarchy describes ONE device and a page costs ``page_bytes /
+        N`` against it — an N-device mesh admits ~N× the pages within the
+        same per-chip fast budget (the paper's per-chip constraint, not a
+        fictitious pooled one). Shards are symmetric, so one budget models
+        every device."""
+        if shards < 1:
+            raise ValueError(f"shards ({shards}) must be >= 1")
+        if cfg.n_kv_heads % shards:
+            raise ValueError(f"shards ({shards}) must divide n_kv_heads "
+                             f"({cfg.n_kv_heads})")
+        pb = page_bytes(cfg, page_size, dtype_bytes) / shards
         reserve = reserve_bytes or {}
         tiers: List[Tuple[str, int]] = []
         for name in kv_tiers:
@@ -519,13 +533,28 @@ class PagedKVManager:
             self._fetch_pending.add(p)
         return max(ready, done), len(need)
 
-    def prefetch_seqs(self, seq_ids: Sequence[int], now: float) -> float:
+    def prefetch_seqs(self, seq_ids: Sequence[int], now: float,
+                      lookahead_seqs: Sequence[int] = ()) -> float:
         """Block-aligned prefetch, issued *ahead* of the fused decode loop:
         start migrating every page the given sequences attend over toward
         the fast tiers, without waiting. ``now`` may be backdated to the
         previous kernel's launch time so the transfer overlaps compute.
-        Returns the virtual completion time."""
-        ready, _ = self._ensure_fast(seq_ids, now)
+        Returns the virtual completion time.
+
+        ``lookahead_seqs``: queue-aware prefetch beyond the next block.
+        When the fetch channel is otherwise idle at ``now`` — the primary
+        prefetch issued nothing and nothing earlier is still in flight —
+        the deepest (most landed KV) scheduled sequence gets its pages
+        promoted too, backdated to ``now``: typically the next prefill
+        chunk's cached-prefix pages, migrating during the decode block
+        that would otherwise leave the channel dark (ROADMAP item 5)."""
+        ready, n_fetched = self._ensure_fast(seq_ids, now)
+        if (lookahead_seqs and self.tier_device is not None
+                and n_fetched == 0
+                and self.tier_device._free["in"] <= now):
+            deepest = max(lookahead_seqs,
+                          key=lambda s: self._seqs[s].n_written)
+            self._ensure_fast([deepest], now)
         return ready
 
     def residency_stall(self, seq_ids: Sequence[int], now: float, *,

@@ -46,11 +46,14 @@ PHASES = (QUEUE, PREFILL, RECOMPUTE, DECODE, STALL, DRAFT)
 
 # ---- Chrome trace track model ---- #
 PID_REQUESTS = 1         # one thread (track) per request id
-PID_DEVICE = 2           # engine + DMA-channel tracks
+PID_DEVICE = 2           # engine + stream + DMA-channel tracks
 TID_ENGINE = 0
 TID_DMA_IN = 1           # fetch: offload -> fast
 TID_DMA_OUT = 2          # spill: fast -> offload
-_DEVICE_TIDS = {"engine": TID_ENGINE, "in": TID_DMA_IN, "out": TID_DMA_OUT}
+TID_PREFILL = 3          # prefill stream (overlapped engine, SS16)
+TID_DECODE = 4           # decode stream
+_DEVICE_TIDS = {"engine": TID_ENGINE, "in": TID_DMA_IN, "out": TID_DMA_OUT,
+                "prefill": TID_PREFILL, "decode": TID_DECODE}
 
 
 @dataclass
@@ -112,9 +115,14 @@ class TraceRecorder:
                                 args)
 
     def engine_span(self, name: str, t0: float, t1: float,
-                    args: Optional[dict] = None) -> None:
-        self._span_event(PID_DEVICE, TID_ENGINE, name, t0, max(t1, t0),
-                         args)
+                    args: Optional[dict] = None,
+                    track: str = "engine") -> None:
+        """Engine-side span. ``track`` routes it: the overlapped engine
+        puts prefill chunks on the ``prefill`` stream track and decode /
+        verify blocks on ``decode``, so concurrent spans land on distinct
+        tids instead of overlapping illegibly on one engine row."""
+        self._span_event(PID_DEVICE, _DEVICE_TIDS[track], name, t0,
+                         max(t1, t0), args)
 
     def device_span(self, channel: str, t0: float, t1: float,
                     n_bytes: float) -> None:
@@ -131,13 +139,16 @@ class TraceRecorder:
                             "prefetch_hit" if hit else "prefetch_miss", t,
                             {"page": page})
 
-    def absorbed_stall(self, t0: float, dur: float) -> None:
+    def absorbed_stall(self, t0: float, dur: float,
+                       track: str = "engine") -> None:
         """A fetch-wait barrier the batch absorbed (the max over its
-        requests' own waits). Sum over these == ``ServeStats.stall_s``."""
+        requests' own waits). Sum over these == ``ServeStats.stall_s``.
+        ``track`` places the span on the stream that absorbed it."""
         if dur <= 0:
             return
         self.stall_total += dur
-        self._span_event(PID_DEVICE, TID_ENGINE, "stall", t0, t0 + dur)
+        self._span_event(PID_DEVICE, _DEVICE_TIDS[track], "stall", t0,
+                         t0 + dur)
 
     # --------------------- per-request lifecycle ----------------------- #
     def submit(self, rid: int, t: float) -> None:
@@ -422,6 +433,10 @@ class TraceRecorder:
              "name": "thread_name", "args": {"name": "dma:in (fetch)"}},
             {"ph": "M", "pid": PID_DEVICE, "tid": TID_DMA_OUT,
              "name": "thread_name", "args": {"name": "dma:out (spill)"}},
+            {"ph": "M", "pid": PID_DEVICE, "tid": TID_PREFILL,
+             "name": "thread_name", "args": {"name": "stream:prefill"}},
+            {"ph": "M", "pid": PID_DEVICE, "tid": TID_DECODE,
+             "name": "thread_name", "args": {"name": "stream:decode"}},
         ]
         for rid in sorted(self._req):
             events.append({"ph": "M", "pid": PID_REQUESTS, "tid": rid,

@@ -185,6 +185,26 @@ def _len_or_head(mesh, n_heads: int, length: int):
     return "none"
 
 
+def paged_cache_pspecs(cache, mesh: Mesh):
+    """Shardings for the serve engine's paged KV pool (DESIGN.md SS16).
+
+    The pool k/v arrays are (n_layers, n_pages, page_size, Hkv, head_dim):
+    the KV-head dim shards over "model" when divisible, everything else —
+    including the pages axis, which the replicated page table indexes —
+    replicates. The int8 per-(layer, kv-head) scales stay REPLICATED on
+    purpose: calibration happens outside the shard_map body so every shard
+    quantizes with bitwise-identical scales, and the shard body slices its
+    own head block on entry."""
+    ms = mesh_axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 5 and shape[3] % ms == 0 and shape[3] >= ms:
+            return P(None, None, None, "model", None)
+        return P(*([None] * len(shape)))
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
 def cache_pspecs(cfg: ArchConfig, cache_shapes, mesh: Mesh,
                  global_batch: int = 0):
     """KV-cache / SSM-state shardings: batch over DP; heads over "model"

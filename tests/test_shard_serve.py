@@ -1,0 +1,218 @@
+"""Multi-device head-sharded serving (DESIGN.md SS16): shard-vs-single
+kernel oracles (f32 + int8), engine token identity across mesh sizes,
+overlapped-stream invariants, and the per-device tier budget.
+
+The multi-device tests skip unless the host exposes enough devices; the
+CI shard lane runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``. Tests never set
+that flag themselves — it must land before jax initializes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.models import (RuntimeOptions, decode_step_paged,
+                          decode_steps_paged, init_paged_cache, init_params,
+                          prefill_paged)
+from repro.models.lm import prefill_paged_chunk
+from repro.serving import ServeEngine, VirtualStream
+
+pytestmark = pytest.mark.shard
+
+N_DEV = len(jax.devices())
+
+
+def _needs(n):
+    return pytest.mark.skipif(
+        N_DEV < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+               f"--xla_force_host_platform_device_count={n})")
+
+
+def _cfg(n_kv_heads):
+    cfg = reduced(get_config("llama3.2-1b"), d_model=64, n_layers=2,
+                  vocab=128)
+    return dataclasses.replace(cfg, n_kv_heads=n_kv_heads)
+
+
+# --------------------------- kernel oracles ---------------------------- #
+
+@_needs(2)
+@pytest.mark.parametrize("cache_dtype", ["", "int8"])
+def test_sharded_kernels_bitwise_match_single_device(cache_dtype):
+    """Head-sharding is a layout change, not a numerics change: the
+    decode step, the chunked prefill, and the fused decode scan must be
+    BITWISE identical to the unsharded kernels — sharded operands see the
+    same per-head slices, and the all-gather only reorders."""
+    cfg = _cfg(n_kv_heads=2)
+    mesh = jax.make_mesh((2,), ("model",), devices=jax.devices()[:2])
+    opts0 = RuntimeOptions(dtype="float32", cache_dtype=cache_dtype)
+    opts1 = dataclasses.replace(opts0, kv_shard_mesh=mesh)
+    params = init_params(cfg, jax.random.PRNGKey(0), opts0)
+    B, S, K, ps = 2, 8, 4, 4
+    rng = np.random.default_rng(3)
+    true_len = np.asarray([8, 6], np.int32)
+    toks = np.zeros((B, S), np.int32)
+    for b in range(B):
+        toks[b, :true_len[b]] = rng.integers(1, cfg.vocab, size=true_len[b])
+    npp = (S + K + ps - 1) // ps
+    n_pages = B * npp + 1
+    pt = np.arange(1, B * npp + 1, dtype=np.int32).reshape(B, npp)
+    cal = cache_dtype == "int8"
+
+    def dec_loop(opts):
+        cache = init_paged_cache(cfg, n_pages, ps, opts)
+        logits, cache = prefill_paged(cfg, params, jnp.asarray(toks), cache,
+                                      jnp.asarray(pt[:, :S // ps]),
+                                      jnp.asarray(true_len), opts,
+                                      calibrate=cal)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lens = jnp.asarray(true_len)
+        cols = [np.asarray(tok)]
+        for _ in range(K):
+            logits, cache = decode_step_paged(cfg, params, tok, lens,
+                                              jnp.asarray(pt), cache, opts)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cols.append(np.asarray(tok))
+            lens = lens + 1
+        return np.stack(cols, 1), np.asarray(logits)
+
+    def chunk(opts):
+        cache = init_paged_cache(cfg, n_pages, ps, opts)
+        lg, _ = prefill_paged_chunk(cfg, params, jnp.asarray(toks), cache,
+                                    jnp.asarray(pt), jnp.int32(0),
+                                    jnp.asarray(true_len), opts,
+                                    calibrate=cal)
+        return np.asarray(lg)
+
+    def fused(opts):
+        cache = init_paged_cache(cfg, n_pages, ps, opts)
+        logits, cache = prefill_paged(cfg, params, jnp.asarray(toks), cache,
+                                      jnp.asarray(pt[:, :S // ps]),
+                                      jnp.asarray(true_len), opts,
+                                      calibrate=cal)
+        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        blk, _ = decode_steps_paged(cfg, params, tok0, jnp.asarray(true_len),
+                                    jnp.asarray(pt), cache, K, opts)
+        return np.asarray(blk)
+
+    for fn in (dec_loop, chunk, fused):
+        base, shard = fn(opts0), fn(opts1)
+        if not isinstance(base, tuple):
+            base, shard = (base,), (shard,)
+        for a, b in zip(base, shard):
+            assert np.array_equal(a, b), fn.__name__
+
+
+# ----------------------- engine token identity ------------------------- #
+
+@pytest.fixture(scope="module")
+def shard_model():
+    cfg = _cfg(n_kv_heads=4)               # divisible by meshes {1, 2, 4}
+    opts = RuntimeOptions(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0), opts)
+    return cfg, opts, params
+
+
+@_needs(2)
+def test_engine_token_identity_across_mesh_sizes(shard_model):
+    """Acceptance: serve output is token-identical to the single-device
+    engine at every mesh size, overlapped or serialized."""
+    cfg, opts, params = shard_model
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(1, cfg.vocab, size=n).tolist()
+            for n in (20, 9, 14, 6)]
+    kw = dict(max_len=40, scheduler="continuous", page_size=8, max_batch=3)
+    want = ServeEngine(cfg, params, opts, **kw).serve(
+        [r[:] for r in reqs], 8)
+    for shards in (1, 2, 4):
+        if shards > N_DEV:
+            continue
+        for overlap in (True, False):
+            eng = ServeEngine(cfg, params, opts, **kw, shards=shards,
+                              overlap=overlap)
+            got = eng.serve([r[:] for r in reqs], 8)
+            assert got == want, (shards, overlap)
+
+
+@_needs(2)
+def test_shard_constructor_validation(shard_model):
+    cfg, opts, params = shard_model
+    with pytest.raises(ValueError, match="shards"):
+        ServeEngine(cfg, params, opts, max_len=32, scheduler="continuous",
+                    shards=0)
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        ServeEngine(cfg, params, opts, max_len=32, scheduler="continuous",
+                    shards=3)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(cfg, params, opts, max_len=32, scheduler="static",
+                    shards=2)
+
+
+# ------------------------ per-device tier budget ----------------------- #
+
+@_needs(4)
+def test_per_device_budget_admits_what_one_device_cannot(shard_model):
+    """The paper's memory constraint is per chip: each of N shards holds
+    1/N of every page, so the same DDR+HBS hierarchy admits N× the pages.
+    A request the single-device pool must reject outright runs (token-
+    identically) on the 4-way mesh."""
+    from repro.core import hbs, lpddr6, npu_hierarchy
+    from repro.serving.kv_manager import page_bytes
+
+    cfg, opts, params = shard_model
+    pb = page_bytes(cfg, 8, 4)             # native f32 pool width
+    hier = npu_hierarchy(
+        lpddr6(capacity_gb=1.5 * pb / 1e9),       # 1 page/dev fast
+        hbs(1e3, latency_us=0.0, capacity_gb=2.5 * pb / 1e9))
+    rng = np.random.default_rng(7)
+    req = rng.integers(1, cfg.vocab, size=20).tolist()   # 4 pages total
+    kw = dict(max_len=32, scheduler="continuous", page_size=8, max_batch=2)
+
+    with pytest.raises(ValueError, match="across all"):
+        ServeEngine(cfg, params, opts, **kw,
+                    hierarchy=hier).serve([req[:]], 8)
+
+    want = ServeEngine(cfg, params, opts, **kw).serve([req[:]], 8)
+    eng4 = ServeEngine(cfg, params, opts, **kw, hierarchy=hier, shards=4)
+    assert eng4.serve([req[:]], 8) == want
+    assert eng4.stats.peak_fast_pages <= 6        # per-device fast budget
+
+
+# -------------------------- stream invariants -------------------------- #
+
+def test_virtual_stream_semantics():
+    s = VirtualStream("p")
+    t0 = s.start(0.0)
+    assert t0 == 0.0
+    assert s.commit(t0, 2.0) == 2.0 and s.free == 2.0
+    assert s.start(1.0) == 2.0             # stream busy until free
+    assert s.start(3.0) == 3.0             # input readiness dominates
+    assert s.commit(3.0, -1.0) == 3.0      # durations clamp at zero
+    assert s.busy_s == pytest.approx(2.0)
+
+
+def test_overlap_makespan_within_serialized_envelope(shard_model):
+    """The two-stream makespan never exceeds the summed phase time (any
+    gap on one stream is covered by the other), and the serialized engine
+    degenerates to exactly that sum."""
+    cfg, opts, params = shard_model
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(1, cfg.vocab, size=n).tolist() for n in (18, 7, 12)]
+    kw = dict(max_len=32, scheduler="continuous", page_size=8, max_batch=2)
+
+    over = ServeEngine(cfg, params, opts, **kw)
+    over.serve([r[:] for r in reqs], 8)
+    s = over.stats
+    assert 0.0 < s.serve_s <= s.prefill_s + s.decode_s + 1e-9
+
+    ser = ServeEngine(cfg, params, opts, **kw, overlap=False)
+    ser.serve([r[:] for r in reqs], 8)
+    t = ser.stats
+    assert t.serve_s == pytest.approx(t.prefill_s + t.decode_s)

@@ -127,6 +127,52 @@ def test_prefetch_ahead_hides_migration_time():
     assert kv2.prefetch_misses == 2
 
 
+def test_lookahead_prefetch_hides_prefill_migration():
+    """ROADMAP item 5: with the fetch channel idle and the primary set
+    already resident, ``prefetch_seqs`` spends the idle window promoting a
+    scheduled prefill's pages so its next chunk starts without a demand
+    stall."""
+    def run(lookahead):
+        kv = _kv(fast=4, offload=16, bw=1e5, lat=1e-3)
+        kv.allocate(0, 2 * 4)              # running seq: fast-resident
+        kv.allocate(1, 4 * 4)              # prefilling seq: 2 fast + 2 hbs
+        kv.prefetch_seqs([0], 0.0,
+                         lookahead_seqs=[1] if lookahead else ())
+        return kv, kv.residency_stall([1], 1.0)
+
+    kv_no, stall_no = run(False)
+    kv_yes, stall_yes = run(True)
+    assert stall_no > 0.0                  # demand fetch pays the migration
+    assert stall_yes == 0.0                # lookahead hid it entirely
+    assert stall_yes < stall_no            # the stall-reduction gate
+    assert kv_yes.prefetch_hits == 2 and kv_no.prefetch_hits == 0
+    _check_residency(kv_yes)
+
+
+def test_lookahead_defers_to_primary_fetch_traffic():
+    """Lookahead is strictly idle-channel work: when the primary set
+    itself misses, the prefilling sequence's pages stay put."""
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4 * 4)                  # primary misses: 2 hbs pages
+    kv.allocate(1, 2 * 4)                  # prefilling seq: offload
+    kv.prefetch_seqs([0], 0.0, lookahead_seqs=[1])
+    assert kv.fetch_bytes == 2 * PB        # primary traffic only
+    assert all(kv.page_tier(p) == "hbs" for p in kv.seq_pages(1))
+    _check_residency(kv)
+
+
+def test_lookahead_targets_deepest_prefill():
+    """Among the scheduled prefills, the one with the most landed KV is
+    promoted first (FCFS order: it decodes soonest)."""
+    kv = _kv(fast=1, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4)                      # running seq (fast-resident)
+    kv.allocate(1, 2 * 4)                  # shallow prefill: 2 hbs
+    kv.allocate(2, 3 * 4)                  # deep prefill: 3 hbs
+    kv.prefetch_seqs([0], 0.0, lookahead_seqs=[1, 2])
+    assert kv.fetch_bytes == 3 * PB        # seq 2's pages, not seq 1's
+    _check_residency(kv)
+
+
 def test_streamed_pages_charge_per_block_but_never_double():
     """A working set larger than the fast tiers streams from HBS: charged
     once per block, not once per prefetch+wait pair."""
