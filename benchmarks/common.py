@@ -18,6 +18,7 @@ BENCH_SECTIONS: Dict[str, Tuple[str, ...]] = {
     "serve_bench": ("workload", "baseline_no_sharing", "prefix_sharing",
                     "derived"),
     "hbs_sweep": ("analytic_13b", "measured_reduced"),
+    "chiplet_sweep": ("analytic_1b", "measured_reduced"),
     "spec_sweep": ("workload", "ngram", "spec_x_hbs"),
     "shard_sweep": ("workload", "overlap", "mesh", "capacity"),
 }

@@ -4,7 +4,10 @@ performance model for gen-AI inference over emerging memory technologies
 dry-run roofline deliverable."""
 from repro.core import (concurrency, memspec, placement, roofline, stco,
                         tiling, tpu_roofline, workload)
-from repro.core.concurrency import (ConcurrencyPoint, HBSGridPoint,
+from repro.core.concurrency import (ChipletGridPoint, ConcurrencyPoint,
+                                    HBSGridPoint, chiplet_interactivity_sweep,
+                                    chiplet_kv_hit_frac,
+                                    compounded_offload_envelope,
                                     concurrency_sweep, concurrent_inference,
                                     expected_tokens_per_pass,
                                     hbs_interactivity_sweep, kv_dedup_factor,
@@ -25,7 +28,9 @@ from repro.core.workload import (TC, Kernel, Phase, decode_phase,
 __all__ = [
     "concurrency", "memspec", "placement", "roofline", "stco", "tiling",
     "tpu_roofline", "workload",
-    "ConcurrencyPoint", "HBSGridPoint", "concurrency_sweep",
+    "ChipletGridPoint", "ConcurrencyPoint", "HBSGridPoint",
+    "chiplet_interactivity_sweep", "chiplet_kv_hit_frac",
+    "compounded_offload_envelope", "concurrency_sweep",
     "concurrent_inference", "expected_tokens_per_pass",
     "hbs_interactivity_sweep", "kv_dedup_factor",
     "max_concurrency_without_spill", "min_hbs_bandwidth_for_itl",

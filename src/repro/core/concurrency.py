@@ -92,7 +92,9 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
                          kv_split: Optional[Sequence[Tuple[str, float]]] = None,
                          shared_prefix_len: int = 0,
                          share_group: int = 1,
-                         kv_shards: int = 1) -> ConcurrencyPoint:
+                         kv_shards: int = 1,
+                         kv_dtype_bytes: Optional[int] = None
+                         ) -> ConcurrencyPoint:
     """Serve ``n_concurrent`` simultaneous requests analytically.
 
     The aggregate KV footprint (``TC.KV`` scaled by batch) runs through
@@ -115,7 +117,15 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
     A pinned ``kv_split`` bypasses the greedy KV split entirely: the KV
     class is removed from the capacity pass (its tier occupancy is instead
     pre-charged against each tier's capacity) and the runtime-observed
-    split is applied on top."""
+    split is applied on top.
+
+    ``kv_dtype_bytes`` (runtime twin: ``ServeEngine(cache_dtype="int8")``)
+    stores the KV class narrower than the compute dtype: the TC.KV
+    footprint — what the capacity pass spills — scales by
+    ``kv_dtype_bytes / dtype_bytes``, so a quantized cache fits more
+    concurrency before tier spill. Traffic stays priced at the compute
+    dtype here; the traffic-side scaling composes in
+    ``min_hbs_bandwidth_for_itl(kv_traffic_scale=...)``."""
     if kv_shards < 1:
         raise ValueError(f"kv_shards ({kv_shards}) must be >= 1")
     ctx = prefill_len + decode_len
@@ -124,6 +134,10 @@ def concurrent_inference(cfg: ArchConfig, hier: MemoryHierarchy,
         n_concurrent, prefill_len, decode_len,
         shared_prefix_len=shared_prefix_len,
         share_group=share_group) / kv_shards
+    if kv_dtype_bytes is not None:
+        if kv_dtype_bytes < 1:
+            raise ValueError(f"kv_dtype_bytes ({kv_dtype_bytes}) must be >= 1")
+        fp[TC.KV] = fp[TC.KV] * kv_dtype_bytes / dtype_bytes
     if kv_split is not None:
         # charge the pinned KV residency against the tiers it occupies so
         # co-resident classes see the reduced capacity, then keep the KV
@@ -222,6 +236,101 @@ def hbs_interactivity_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
     return out
 
 
+@dataclass(frozen=True)
+class ChipletGridPoint:
+    """One cell of the chiplet-capacity x HBS bandwidth/latency grid."""
+    chiplet_mb: float
+    hit_frac: float           # fraction of KV reads served by the chiplet
+    base: HBSGridPoint
+
+    @property
+    def bw_gbps(self) -> float:
+        return self.base.bw_gbps
+
+    @property
+    def latency_us(self) -> float:
+        return self.base.latency_us
+
+    @property
+    def tps(self) -> float:
+        return self.base.tps
+
+    @property
+    def itl_s(self) -> float:
+        """HBS-bound approximation (DESIGN.md SS17): on a long-context
+        decode the inter-token latency is dominated by streaming the KV
+        off the offload link, so the fraction ``hit_frac`` of reads the
+        bonded chiplet absorbs shrinks the ITL by ``1 - hit_frac``.
+        Never worse than the chiplet-less base point by construction."""
+        return self.base.itl_s * (1.0 - self.hit_frac)
+
+    @property
+    def kv_spill_frac(self) -> float:
+        return self.base.kv_spill_frac
+
+
+def chiplet_kv_hit_frac(cfg: ArchConfig, ctx: int, *, chiplet_mb: float,
+                        dtype_bytes: int = 2) -> float:
+    """Steady-state fraction of per-token KV reads served from a bonded
+    chiplet buffer of ``chiplet_mb`` megabytes.
+
+    Decode attention reads the whole landed context every token, so a
+    capacity-``C`` buffer holding the hottest pages serves ``C / KV``
+    of the read traffic once the EMA promoter has converged (the runtime
+    twin is ``ServeStats.chiplet_hit_rate``). Clamped to [0, 1]; a buffer
+    larger than the working set hits on every read."""
+    if chiplet_mb <= 0:
+        return 0.0
+    kv = float(cfg.kv_bytes_per_token(dtype_bytes)) * max(ctx, 1)
+    if kv <= 0:
+        return 0.0
+    return min(chiplet_mb * 1e6 / kv, 1.0)
+
+
+def chiplet_interactivity_sweep(cfg: ArchConfig, hier: MemoryHierarchy,
+                                place: Placement, *,
+                                chiplet_mb: Iterable[float] = (32., 64., 128.),
+                                bw_gbps: Iterable[float] = (2., 4., 8., 16.,
+                                                            32.),
+                                latency_us: Iterable[float] = (5., 20., 80.),
+                                n_concurrent: int = 1,
+                                prefill_len: int = 8192,
+                                decode_len: int = 256,
+                                dtype_bytes: int = 2,
+                                kv_dtype_bytes: Optional[int] = None,
+                                kv_split: Optional[Sequence[Tuple[str, float]]]
+                                = None) -> List[ChipletGridPoint]:
+    """The HBS interactivity grid with a chiplet global-buffer tier in
+    front of it: every ``(chiplet capacity, HBS bandwidth, HBS latency)``
+    cell reports the ITL after the chiplet's steady-state hit fraction
+    absorbs its share of the KV streaming (DESIGN.md SS17).
+
+    The base HBS grid is swept ONCE — the chiplet axis only rescales the
+    readout — so the sweep costs the same roofline passes as
+    ``hbs_interactivity_sweep``. The runtime twin is
+    ``benchmarks/chiplet_sweep.py``, which drives the serve engine's EMA
+    promoter over the same chiplet sizes. ``kv_dtype_bytes`` prices the
+    hit fraction at the stored KV width: a narrower cache fits more
+    context into the same chiplet, compounding the two levers."""
+    grid = hbs_interactivity_sweep(cfg, hier, place, bw_gbps=bw_gbps,
+                                   latency_us=latency_us,
+                                   n_concurrent=n_concurrent,
+                                   prefill_len=prefill_len,
+                                   decode_len=decode_len,
+                                   dtype_bytes=dtype_bytes,
+                                   kv_split=kv_split)
+    ctx = prefill_len + decode_len
+    out: List[ChipletGridPoint] = []
+    for mb in chiplet_mb:
+        h = chiplet_kv_hit_frac(cfg, ctx, chiplet_mb=mb,
+                                dtype_bytes=(kv_dtype_bytes
+                                             if kv_dtype_bytes is not None
+                                             else dtype_bytes))
+        for g in grid:
+            out.append(ChipletGridPoint(mb, h, g))
+    return out
+
+
 def expected_tokens_per_pass(alpha: float, k: int) -> float:
     """Expected tokens landed by ONE speculative verify pass with draft
     length ``k`` and per-position acceptance probability ``alpha``
@@ -257,7 +366,9 @@ def speculative_tps(base_tps: float, alpha: float, k: int, *,
 def min_hbs_bandwidth_for_itl(grid: Sequence[HBSGridPoint],
                               itl_target_s: float, *,
                               tokens_per_pass: float = 1.0,
-                              overhead_frac: float = 0.0
+                              overhead_frac: float = 0.0,
+                              kv_traffic_scale: float = 1.0,
+                              chiplet_hit_frac: float = 0.0
                               ) -> Dict[float, float]:
     """Per HBS latency, the smallest swept bandwidth whose predicted ITL
     meets the target (the paper's requirement readout); latencies whose
@@ -268,10 +379,29 @@ def min_hbs_bandwidth_for_itl(grid: Sequence[HBSGridPoint],
     bandwidth-bound streaming pass emits that many tokens on average, so
     the SAME interactivity target is met at LOWER HBS bandwidth — the
     spec-compounded envelope. ``overhead_frac`` prices the per-pass draft
-    + verify-window overhead. Defaults reproduce plain decode."""
+    + verify-window overhead.
+
+    ``kv_traffic_scale`` (int8 KV: ``kv_dtype_bytes / dtype_bytes``) and
+    ``chiplet_hit_frac`` (see ``chiplet_kv_hit_frac``) shrink the
+    KV-streaming portion of the ITL under the HBS-bound approximation
+    (DESIGN.md SS17): a narrower stored cache moves fewer bytes per read,
+    and chiplet-resident hot pages never touch the HBS link at all, so
+    ``itl_eff = itl * kv_traffic_scale * (1 - chiplet_hit_frac)``. Both
+    factors are <= 1, so the returned envelope is never-worse than the
+    plain one by construction. Defaults reproduce plain fp16 decode.
+    Pass ``chiplet_hit_frac`` only with a plain ``HBSGridPoint`` grid —
+    a ``ChipletGridPoint`` grid already folds its own hit fraction into
+    ``itl_s``."""
     if tokens_per_pass <= 0:
         raise ValueError("tokens_per_pass must be > 0")
-    scale = (1.0 + max(overhead_frac, 0.0)) / tokens_per_pass
+    if not 0.0 < kv_traffic_scale <= 1.0:
+        raise ValueError(f"kv_traffic_scale ({kv_traffic_scale}) must be "
+                         "in (0, 1]")
+    if not 0.0 <= chiplet_hit_frac <= 1.0:
+        raise ValueError(f"chiplet_hit_frac ({chiplet_hit_frac}) must be "
+                         "in [0, 1]")
+    scale = ((1.0 + max(overhead_frac, 0.0)) / tokens_per_pass
+             * kv_traffic_scale * (1.0 - chiplet_hit_frac))
     best: Dict[float, float] = {}
     for g in grid:
         if g.itl_s * scale <= itl_target_s:
@@ -280,6 +410,37 @@ def min_hbs_bandwidth_for_itl(grid: Sequence[HBSGridPoint],
         else:
             best.setdefault(g.latency_us, float("inf"))
     return best
+
+
+def compounded_offload_envelope(grid: Sequence[HBSGridPoint],
+                                itl_target_s: float, *,
+                                dtype_bytes: int = 2,
+                                kv_dtype_bytes: int = 1,
+                                chiplet_hit_frac: float = 0.0,
+                                tokens_per_pass: float = 1.0,
+                                overhead_frac: float = 0.0
+                                ) -> Dict[float, float]:
+    """The int8-KV x chiplet x speculative compounded HBS requirement:
+    every lever the stack implements, priced against ONE swept grid.
+
+    Quantized KV (``kv_dtype_bytes`` < ``dtype_bytes``) scales the bytes
+    each streamed token moves; the chiplet's hit fraction removes its
+    share of reads from the HBS link entirely; speculative decoding lands
+    ``tokens_per_pass`` tokens per streaming pass. All three multiply
+    into the effective ITL, so the minimum HBS bandwidth that keeps the
+    platform interactive drops by the product — the paper's "technology
+    solutions compound" readout. With all defaults at their identity
+    values this is exactly ``min_hbs_bandwidth_for_itl(grid, target)``."""
+    if kv_dtype_bytes < 1 or dtype_bytes < 1:
+        raise ValueError("dtype widths must be >= 1 byte")
+    if kv_dtype_bytes > dtype_bytes:
+        raise ValueError(f"kv_dtype_bytes ({kv_dtype_bytes}) must not "
+                         f"exceed dtype_bytes ({dtype_bytes})")
+    return min_hbs_bandwidth_for_itl(
+        grid, itl_target_s, tokens_per_pass=tokens_per_pass,
+        overhead_frac=overhead_frac,
+        kv_traffic_scale=kv_dtype_bytes / dtype_bytes,
+        chiplet_hit_frac=chiplet_hit_frac)
 
 
 def max_concurrency_without_spill(cfg: ArchConfig, hier: MemoryHierarchy,

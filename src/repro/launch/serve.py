@@ -107,6 +107,29 @@ def main() -> None:
     ap.add_argument("--hbs-us", type=float, default=None,
                     help="override HBS issue latency (µs) for migration "
                          "timing")
+    ap.add_argument("--chiplet-mb", type=float, default=None,
+                    help="bond a promote-only SRAM chiplet buffer of this "
+                         "many MB in front of the fast KV tier (DESIGN.md "
+                         "SS17); hot pages promote in by EMA touch "
+                         "frequency, cold residents demote out LRU "
+                         "(needs --kv-fast-mb)")
+    ap.add_argument("--chiplet-gbps", type=float, default=None,
+                    help="override the chiplet link bandwidth (GB/s) for "
+                         "promotion/demotion timing (default: the "
+                         "sram_chiplet preset's)")
+    ap.add_argument("--chiplet-us", type=float, default=None,
+                    help="override the chiplet link issue latency (µs)")
+    ap.add_argument("--layer-overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="slice each demand fetch per layer and pipeline "
+                         "the slices against the kernel's layer loop "
+                         "(DESIGN.md SS17); --no-layer-overlap restores "
+                         "the whole-block fetch barrier baseline")
+    ap.add_argument("--writeback-link", default="dedicated",
+                    choices=["shared", "dedicated"],
+                    help="'dedicated': dirty-page write-back rides its own "
+                         "out channel; 'shared': spills and fetches "
+                         "contend for one half-duplex offload link")
     ap.add_argument("--trace-out", default=None,
                     help="write the run's Chrome trace-event JSON here "
                          "(perfetto-loadable: one track per request plus "
@@ -135,12 +158,20 @@ def main() -> None:
             draft_cfg = reduced(draft_cfg, d_model=max(args.d_model // 2, 16))
     max_len = args.prompt_len + args.new_tokens + args.shared_doc
     hier = None
+    if args.chiplet_mb is not None and args.kv_fast_mb is None:
+        ap.error("--chiplet-mb needs --kv-fast-mb (the chiplet promotes "
+                 "out of the tiered KV pool)")
     if args.kv_fast_mb is not None:
-        from repro.core import hbs, lpddr6, npu_hierarchy
+        from repro.core import hbs, lpddr6, npu_hierarchy, sram_chiplet
+        chiplet = None
+        if args.chiplet_mb is not None:
+            chiplet = sram_chiplet(args.chiplet_gbps or 512.0,
+                                   capacity_mb=args.chiplet_mb)
         hier = npu_hierarchy(
             lpddr6(capacity_gb=args.kv_fast_mb / 1e3),
             hbs(args.hbs_gbps or 8.0, latency_us=args.hbs_us or 20.0,
-                capacity_gb=args.hbs_gb))
+                capacity_gb=args.hbs_gb),
+            chiplet=chiplet)
     eng = ServeEngine(cfg, opts=RuntimeOptions(dtype=args.dtype),
                       kv_policy=args.kv_policy, max_len=max_len,
                       scheduler=args.scheduler, page_size=args.page_size,
@@ -155,7 +186,11 @@ def main() -> None:
                       draft_cfg=draft_cfg, temperature=args.temperature,
                       top_k=args.top_k, top_p=args.top_p,
                       sample_seed=args.seed,
-                      shards=args.shards, overlap=not args.no_overlap)
+                      shards=args.shards, overlap=not args.no_overlap,
+                      chiplet_gbps=args.chiplet_gbps,
+                      chiplet_latency_us=args.chiplet_us,
+                      layer_overlap=args.layer_overlap,
+                      writeback_link=args.writeback_link)
 
     rng = np.random.default_rng(0)
     if args.concurrency:
@@ -201,6 +236,18 @@ def main() -> None:
                   f"prefetch_hit={s.prefetch_hit_rate:.0%} "
                   f"kv_width={eng.kv_dtype_bytes}B "
                   f"peak_kv={peak_mb:.2f}MB (fast {fast_mb:.2f}MB)")
+            print(f"[serve] overlap: layer_overlap={args.layer_overlap} "
+                  f"stall_saved={s.stall_saved_s*1e3:.1f}ms "
+                  f"writeback={args.writeback_link} "
+                  f"clean_demotions={s.clean_demotions}")
+            if args.chiplet_mb is not None:
+                chan = " ".join(f"{k}={v/1e6:.2f}MB" for k, v
+                                in sorted(s.channel_bytes.items()))
+                print(f"[serve] chiplet: {args.chiplet_mb:g}MB "
+                      f"hit_rate={s.chiplet_hit_rate:.0%} "
+                      f"promoted={s.chiplet_promotions}p "
+                      f"demoted={s.chiplet_demotions}p "
+                      f"channels[{chan}]")
             if s.stall_by_rid:
                 worst = sorted(s.stall_by_rid.items(),
                                key=lambda kv_: -kv_[1])[:4]

@@ -8,10 +8,12 @@ from repro.models.api import (RuntimeOptions, SHAPES, ShapeSpec,
                               paged_supported, prefill, prefill_paged,
                               prefill_paged_chunk, spec_decode_verify,
                               train_loss)
+from repro.models.lm import layer_dma_slices, page_layer_nbytes
 
 __all__ = ["RuntimeOptions", "SHAPES", "ShapeSpec", "cell_runnable",
            "copy_pages", "decode_step", "decode_step_paged", "decode_steps",
            "decode_steps_paged", "decode_verify_paged", "forward",
            "init_cache", "init_paged_cache", "init_params", "input_specs",
-           "module_for", "paged_supported", "prefill", "prefill_paged",
+           "layer_dma_slices", "module_for", "page_layer_nbytes",
+           "paged_supported", "prefill", "prefill_paged",
            "prefill_paged_chunk", "spec_decode_verify", "train_loss"]

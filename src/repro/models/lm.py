@@ -502,6 +502,25 @@ def init_paged_cache(cfg: ArchConfig, n_pages: int, page_size: int,
     return {"stack": c}
 
 
+def layer_dma_slices(cfg: ArchConfig) -> int:
+    """Natural DMA slice count for layer-overlapped page migration
+    (DESIGN.md SS17): the paged pool's leading axis is ``n_layers``, so a
+    page's layer-``l`` slice — ``page_bytes / n_layers`` of k+v — is one
+    contiguous region per pool array, fetchable as one link of a chained
+    DMA descriptor. The layer loop (``lax.scan`` over ``params["stack"]``)
+    consumes slices strictly in order, which is what lets the engine
+    pipeline slice ``l``'s transfer under layer ``l-1``'s compute."""
+    return max(int(cfg.n_layers), 1)
+
+
+def page_layer_nbytes(cfg: ArchConfig, page_size: int,
+                      dtype_bytes: int = 2) -> float:
+    """Bytes of ONE layer's k+v slice of a page — the chained-descriptor
+    slice granularity used by layer-overlapped migration."""
+    per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+    return float(per_tok * page_size)
+
+
 def _amax_scale(val, axes):
     """Per-kv-head symmetric int8 scale: amax/127 reduced over ``axes``."""
     return jnp.maximum(jnp.abs(val.astype(jnp.float32)).max(axes),

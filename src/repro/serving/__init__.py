@@ -1,8 +1,9 @@
 from repro.serving.draft import ModelDraft, NGramDraft
 from repro.serving.engine import ServeEngine, ServeStats
 from repro.serving.kv_manager import (PageAllocationError, PagedKVManager,
-                                      PrefixAllocation, SimulatedTierDevice,
-                                      TierBudget, page_bytes)
+                                      PrefixAllocation, ResidencyPlan,
+                                      SimulatedTierDevice, TierBudget,
+                                      page_bytes)
 from repro.serving.metrics import latency_summary_ms, pct_ms, percentile
 from repro.serving.scheduler import (AdaptiveSpecK, ContinuousScheduler,
                                      Request)
@@ -11,7 +12,8 @@ from repro.serving.trace import PHASES, TraceRecorder, validate_chrome_trace
 
 __all__ = ["ModelDraft", "NGramDraft", "ServeEngine", "ServeStats",
            "PageAllocationError", "PagedKVManager", "PrefixAllocation",
-           "SimulatedTierDevice", "TierBudget", "page_bytes", "AdaptiveSpecK",
+           "ResidencyPlan", "SimulatedTierDevice", "TierBudget",
+           "page_bytes", "AdaptiveSpecK",
            "ContinuousScheduler", "Request", "PHASES", "TraceRecorder",
            "VirtualStream", "validate_chrome_trace", "latency_summary_ms",
            "pct_ms", "percentile"]

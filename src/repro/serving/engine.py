@@ -41,8 +41,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import (RuntimeOptions, copy_pages, decode_step,
                           decode_steps, decode_steps_paged, init_cache,
-                          init_paged_cache, init_params, paged_supported,
-                          prefill, prefill_paged_chunk, spec_decode_verify)
+                          init_paged_cache, init_params, layer_dma_slices,
+                          paged_supported, prefill, prefill_paged_chunk,
+                          spec_decode_verify)
 from repro.models import sampling
 from repro.serving import metrics
 from repro.serving.kv_manager import (PagedKVManager, SimulatedTierDevice,
@@ -95,13 +96,24 @@ class ServeStats:
     # HBS page offload (DESIGN.md SS13): migration traffic + decode stalls
     # charged in virtual seconds by the SimulatedTierDevice
     stall_s: float = 0.0                # kernel launches waiting on fetches
-    spill_bytes: float = 0.0            # fast -> offload migration traffic
+    spill_bytes: float = 0.0            # dirty write-back traffic (out)
     fetch_bytes: float = 0.0            # offload -> fast migration traffic
     pages_spilled: int = 0
     pages_fetched: int = 0
     peak_fast_pages: int = 0            # max fast-tier (non-offload) pages
     prefetch_hits: int = 0              # fetches that beat their kernel
     prefetch_misses: int = 0            # fetches a kernel had to wait on
+    # SS17: per-direction DMA bytes keyed "src->dst" at each link boundary
+    # (write-back vs fetch vs chiplet promote/demote made visible)
+    channel_bytes: Dict[str, float] = field(default_factory=dict)
+    clean_demotions: int = 0            # spills that skipped write-back
+    # chiplet promotion level (SS17)
+    chiplet_promotions: int = 0
+    chiplet_demotions: int = 0
+    tier_touches: Dict[str, int] = field(default_factory=dict)
+    # stall the layer-sliced overlap hid vs the whole-block barrier
+    # counterfactual (0 when --no-layer-overlap)
+    stall_saved_s: float = 0.0
     # runtime -> analytic bridge: the landed-page tier split observed at
     # peak occupancy, pin-able into core.concurrency.concurrent_inference
     kv_split_at_peak: tuple = ()
@@ -120,6 +132,14 @@ class ServeStats:
     def prefetch_hit_rate(self) -> float:
         n = self.prefetch_hits + self.prefetch_misses
         return self.prefetch_hits / n if n else 1.0
+
+    @property
+    def chiplet_hit_rate(self) -> float:
+        """Fraction of landed-page kernel reads served from the chiplet
+        level (0.0 when no chiplet tier is configured)."""
+        total = sum(self.tier_touches.values())
+        return (self.tier_touches.get("chiplet", 0) / total
+                if total else 0.0)
 
     @property
     def acceptance_rate(self) -> float:
@@ -168,6 +188,10 @@ class ServeEngine:
                  prefix_cache: bool = True, decode_lookahead: int = 8,
                  offload: bool = True, hbs_gbps: Optional[float] = None,
                  hbs_latency_us: Optional[float] = None,
+                 chiplet_gbps: Optional[float] = None,
+                 chiplet_latency_us: Optional[float] = None,
+                 layer_overlap: bool = True,
+                 writeback_link: str = "dedicated",
                  spec_mode: str = "off", spec_k: int = 4, draft_cfg=None,
                  draft_params=None, temperature: float = 0.0,
                  top_k: int = 0, top_p: float = 1.0, sample_seed: int = 0,
@@ -293,12 +317,32 @@ class ServeEngine:
         # SS13). ``hbs_gbps``/``hbs_latency_us`` override the hierarchy's
         # offload-level numbers (the CLI/bench sweep lever). A fresh device
         # is built per serve() so channel horizons reset between runs.
+        if writeback_link not in ("dedicated", "shared"):
+            raise ValueError(f"writeback_link must be 'dedicated' or "
+                             f"'shared', got {writeback_link!r}")
+        self.writeback_link = writeback_link
         self._tier_device_args = None
         if (offload and hierarchy is not None and self.tier_budget is not None
                 and self.tier_budget.offload_tier is not None):
             self._tier_device_args = (hierarchy,
                                       self.tier_budget.offload_tier,
                                       hbs_gbps, hbs_latency_us)
+        # chiplet promotion level (DESIGN.md SS17): when the budget's
+        # leading tier is promotion-only (the hierarchy carries a chiplet
+        # side tier), migrations over the bonded chiplet link are charged
+        # on their own device with independent in/out queues
+        self._chiplet_device_args = None
+        if (hierarchy is not None and self.tier_budget is not None
+                and self.tier_budget.n_promote):
+            self._chiplet_device_args = (hierarchy,
+                                         self.tier_budget.tiers[0][0],
+                                         chiplet_gbps, chiplet_latency_us)
+        # layer-sliced migration overlapped with the layer loop (SS17):
+        # demand fetches become chained descriptors of n_layers slices
+        # pipelined against per-layer compute; off -> the whole-block
+        # barrier baseline (--no-layer-overlap)
+        self.layer_overlap = layer_overlap
+        self.n_layer_slices = layer_dma_slices(cfg) if layer_overlap else 1
         # requested pool size; PagedKVManager clamps it to the tier budget
         self.n_pages = (n_pages if n_pages is not None
                         else max_batch * self.n_pages_per_seq + 1)
@@ -511,15 +555,29 @@ class ServeEngine:
         device = (SimulatedTierDevice.from_hierarchy(
                       self._tier_device_args[0], self._tier_device_args[1],
                       bw_gbps=self._tier_device_args[2],
-                      latency_us=self._tier_device_args[3])
+                      latency_us=self._tier_device_args[3],
+                      duplex=(self.writeback_link == "dedicated"))
                   if self._tier_device_args is not None else None)
         if device is not None:
             device.tracer = trace
+        # bonded chiplet link (SS17): its own device with independent
+        # in/out queues — promotions/demotions never contend with the
+        # offload link, and never gate a kernel
+        cdev = (SimulatedTierDevice.from_hierarchy(
+                    self._chiplet_device_args[0],
+                    self._chiplet_device_args[1],
+                    bw_gbps=self._chiplet_device_args[2],
+                    latency_us=self._chiplet_device_args[3],
+                    link="chiplet")
+                if self._chiplet_device_args is not None else None)
+        if cdev is not None:
+            cdev.tracer = trace
         kv = PagedKVManager(self.n_pages, ps, tier_budget=self.tier_budget,
                             enable_prefix_cache=self.prefix_cache,
                             dtype_bytes=self.kv_dtype_bytes,
                             page_nbytes=self.page_nbytes_shard,
-                            tier_device=device, tracer=trace)
+                            tier_device=device, chiplet_device=cdev,
+                            tracer=trace)
         self.kv_manager = kv
         sched = ContinuousScheduler(kv, B, prefill_chunk=C,
                                     prefill_budget=self.prefill_budget,
@@ -552,16 +610,28 @@ class ServeEngine:
                 rules.paged_cache_pspecs(cache, self.mesh)))
         calibrated = self.opts.cache_dtype != "int8"  # only int8 calibrates
 
-        def stall_barrier(reqs: List[Request], t0: float,
-                          track: str) -> float:
-            """Fetch-wait barrier with per-request attribution: the batch
-            absorbs the max wait into the issuing stream's next op (the
-            caller folds the return into the op's duration), each request
-            is charged its OWN pages' wait (SS13 deferred item)."""
+        def stall_plan(reqs: List[Request], t0: float):
+            """Pre-kernel half of the fetch-wait barrier (SS17): decide
+            swaps/spills and charge write-back now, defer the demand-fetch
+            issue until the kernel's wall time is known so the fetch can
+            be layer-sliced against the layer loop."""
+            return kv.plan_residency([r.rid for r in reqs], t0)
+
+        def stall_charge(plan, reqs: List[Request], t0: float, dw: float,
+                         track: str) -> float:
+            """Post-kernel half: issue the planned fetch (layer-sliced
+            when overlap is on), compute the pipelined stall, and
+            attribute it — the batch absorbs the stall into the issuing
+            stream's next op (the caller folds the return into the op's
+            duration), each request is charged its OWN pages' wait scaled
+            by the overlap savings (SS13/SS17)."""
             per: Dict[int, float] = {}
-            s = kv.residency_stall([r.rid for r in reqs], t0, per_seq=per)
+            s, barrier = kv.charge_residency(
+                plan, t0, n_slices=self.n_layer_slices, compute_s=dw,
+                per_seq=per)
             if s > 0:
                 self.stats.stall_s += s
+            self.stats.stall_saved_s += max(0.0, barrier - s)
             trace.absorbed_stall(t0, s, track=track)
             for r in reqs:
                 v = per.get(r.rid, 0.0)
@@ -647,9 +717,11 @@ class ServeEngine:
                     pt = kv.table_row(req.rid, n_pp)[None]
                     self._chunk_shapes.add(((1, C), not calibrated))
                     t0 = pstream.start(svc_floor.get(req.rid, 0.0))
-                    # cached prefix pages may be offload-resident: wait
-                    # out their migration before the chunk launches
-                    s = stall_barrier([req], t0, "prefill")
+                    # cached prefix pages may be offload-resident: plan
+                    # their migration now, issue the fetch layer-sliced
+                    # against the chunk's layer loop after the kernel's
+                    # wall time is measured (SS17)
+                    plan = stall_plan([req], t0)
                     w0 = time.perf_counter()
                     logits, cache = self._prefill_chunk(
                         self.params, jnp.asarray(toks), cache,
@@ -658,6 +730,7 @@ class ServeEngine:
                         calibrate=not calibrated)
                     logits.block_until_ready()
                     dw = time.perf_counter() - w0
+                    s = stall_charge(plan, [req], t0, dw, "prefill")
                     self.stats.host_syncs += 1
                     calibrated = True
                     t1 = pstream.commit(t0, s + dw)
@@ -779,7 +852,7 @@ class ServeEngine:
                                         jnp.asarray(emitted))
                 self._decode_shapes.add(("spec", B, n_tok))
                 tb = dstream.start()
-                s = stall_barrier([r for _, r in parts], tb, "decode")
+                plan = stall_plan([r for _, r in parts], tb)
                 w0 = time.perf_counter()
                 out, n_acc, _, cache = self._spec_verify(
                     self.params, jnp.asarray(tokens),
@@ -787,7 +860,10 @@ class ServeEngine:
                     jnp.asarray(tables), cache, keys)
                 out_np = np.asarray(out)
                 nacc_np = np.asarray(n_acc)
-                tv = dstream.commit(tb, s + time.perf_counter() - w0)
+                dw = time.perf_counter() - w0
+                s = stall_charge(plan, [r for _, r in parts], tb, dw,
+                                 "decode")
+                tv = dstream.commit(tb, s + dw)
                 dt = tv - t0
                 trace.engine_span("spec_verify", tb, tv,
                                   {"n_tok": n_tok, "n_seqs": len(parts)},
@@ -871,11 +947,12 @@ class ServeEngine:
                 # short instead of decoding K wasted pad steps
                 n_steps = min(K, _next_pow2(int(quota.max())))
                 self._decode_shapes.add(("paged", B, n_steps))
-                # fetch-wait barrier (SS13): every page this block attends
-                # over must be fast-resident — or its streamed read landed
-                # — before the kernel launches; a block that outruns its
-                # prefetch absorbs the residual as recorded stall
-                s = stall_barrier([r for _, r in parts], t0, "decode")
+                # fetch-wait barrier (SS13/SS17): every page this block
+                # attends over must be fast-resident — or its layer slice
+                # landed — before the layer consumes it; a block that
+                # outruns its prefetch absorbs the residual as recorded
+                # stall, shrunk by the layer-loop overlap
+                plan = stall_plan([r for _, r in parts], t0)
                 w0 = time.perf_counter()
                 if self.temperature > 0:
                     rids = np.zeros((B,), np.int32)
@@ -897,7 +974,10 @@ class ServeEngine:
                         n_steps=n_steps, done=jnp.asarray(inactive),
                         quota=jnp.asarray(quota))
                 blk_np = np.asarray(blk)
-                tv = dstream.commit(t0, s + time.perf_counter() - w0)
+                dw = time.perf_counter() - w0
+                s = stall_charge(plan, [r for _, r in parts], t0, dw,
+                                 "decode")
+                tv = dstream.commit(t0, s + dw)
                 dt = tv - t0
                 trace.engine_span("decode_block", t0, tv,
                                   {"n_steps": n_steps,
@@ -948,6 +1028,15 @@ class ServeEngine:
         self.stats.pages_fetched += kv.n_fetches
         self.stats.prefetch_hits += kv.prefetch_hits
         self.stats.prefetch_misses += kv.prefetch_misses
+        self.stats.clean_demotions += kv.clean_demotions
+        self.stats.chiplet_promotions += kv.chiplet_promotions
+        self.stats.chiplet_demotions += kv.chiplet_demotions
+        for ch, nb in kv.channel_bytes.items():
+            self.stats.channel_bytes[ch] = (
+                self.stats.channel_bytes.get(ch, 0.0) + nb)
+        for tier, n in kv.tier_touches.items():
+            self.stats.tier_touches[tier] = (
+                self.stats.tier_touches.get(tier, 0) + n)
         self.stats.prefill_compiles = len(self._chunk_shapes)
         self.stats.decode_compiles = len(self._decode_shapes)
         assert not sched.waiting and not sched.slots, "unserved requests"
@@ -965,6 +1054,7 @@ class ServeEngine:
             itl=self.stats.itl[snap_itl:],
             new_tokens=self.stats.new_tokens - snap_tokens,
             stall_by_rid={rid: v - snap_srid.get(rid, 0.0)
-                          for rid, v in self.stats.stall_by_rid.items()})
+                          for rid, v in self.stats.stall_by_rid.items()},
+            channel_bytes=dict(kv.channel_bytes))
         by_rid = {req.rid: req.out for req in sched.done}
         return [by_rid[i] for i in range(len(requests))]

@@ -67,10 +67,13 @@ class SimulatedTierDevice:
     """Virtual-time migration engine between the fast KV tiers and the
     offload tier (DESIGN.md SS13).
 
-    Two independent DMA channels — ``"in"`` (fetch: offload -> fast) and
-    ``"out"`` (spill: fast -> offload) — each a single queue whose busy
+    Two DMA channels — ``"in"`` (fetch: offload -> fast) and ``"out"``
+    (spill/write-back: fast -> offload) — each a single queue whose busy
     horizon advances by the offload tier's issue latency once per
-    *batched* migration plus ``bytes / bandwidth``. All times are virtual
+    *batched* migration plus ``bytes / bandwidth``. A dedicated-HBS link
+    is full duplex (independent queues); a shared link (PCIe-attached
+    SSD style, ``duplex=False``) serializes both directions through one
+    queue, so write-back pressure delays fetches. All times are virtual
     seconds on the caller's clock (the engine passes
     ``perf_counter() + accumulated_stall``); the device never sleeps and
     never moves data — it only answers "when would this transfer have
@@ -79,15 +82,19 @@ class SimulatedTierDevice:
     bandwidth: float                     # bytes/s across the offload link
     latency: float                       # seconds per migration batch issue
     tracer: Optional[object] = None      # TraceRecorder: DMA-track spans
+    link: str = "hbs"                    # link name for trace track routing
+    duplex: bool = True                  # False: in/out share one queue
     _free: Dict[str, float] = field(
-        default_factory=lambda: {"in": 0.0, "out": 0.0})
+        default_factory=lambda: {"in": 0.0, "out": 0.0, "io": 0.0})
     busy_s: Dict[str, float] = field(
         default_factory=lambda: {"in": 0.0, "out": 0.0})
 
     @classmethod
     def from_hierarchy(cls, hier, offload_tier: str, *,
                        bw_gbps: Optional[float] = None,
-                       latency_us: Optional[float] = None
+                       latency_us: Optional[float] = None,
+                       duplex: bool = True,
+                       link: Optional[str] = None
                        ) -> "SimulatedTierDevice":
         """Timing from the hierarchy's offload level, with CLI-style
         overrides (``bw_gbps`` in GB/s, ``latency_us`` in µs)."""
@@ -97,39 +104,108 @@ class SimulatedTierDevice:
         if bw <= 0:
             raise ValueError(f"offload tier {offload_tier!r} needs a "
                              f"positive bandwidth, got {bw}")
-        return cls(bandwidth=bw, latency=max(lat, 0.0))
+        return cls(bandwidth=bw, latency=max(lat, 0.0),
+                   duplex=duplex, link=link or offload_tier)
 
-    def transfer(self, channel: str, n_bytes: float, now: float) -> float:
+    def _qkey(self, channel: str) -> str:
+        return channel if self.duplex else "io"
+
+    def idle(self, channel: str, now: float) -> bool:
+        """True when the channel's queue has drained by ``now``."""
+        return self._free.get(self._qkey(channel), 0.0) <= now
+
+    def transfer(self, channel: str, n_bytes: float, now: float,
+                 label: Optional[str] = None) -> float:
         """Enqueue one batched migration; returns its completion time."""
-        start = max(self._free[channel], now)
+        q = self._qkey(channel)
+        start = max(self._free.get(q, 0.0), now)
         done = start + self.latency + n_bytes / self.bandwidth
         self.busy_s[channel] += done - start
-        self._free[channel] = done
+        self._free[q] = done
         if self.tracer is not None:
-            self.tracer.device_span(channel, start, done, n_bytes)
+            self.tracer.device_span(channel, start, done, n_bytes,
+                                    link=self.link, label=label)
         return done
+
+    def transfer_sliced(self, channel: str, n_bytes: float, now: float,
+                        n_slices: int, label: Optional[str] = None
+                        ) -> List[float]:
+        """Enqueue one migration as a chained DMA descriptor of
+        ``n_slices`` equal slices (DESIGN.md SS17: one slice per model
+        layer). Issue latency is charged ONCE — the chain is a single
+        queued command — and slice ``l`` completes at ``start + latency +
+        (l+1) * bytes / (n_slices * bandwidth)``, so a consumer walking
+        the slices in order (the layer loop) can start on slice 0 while
+        the tail still streams. The final slice lands exactly when the
+        equivalent bulk ``transfer`` would, which is what makes
+        layer-overlap never worse than the whole-block barrier. Returns
+        the per-slice completion times."""
+        if n_slices <= 1:
+            return [self.transfer(channel, n_bytes, now, label=label)]
+        q = self._qkey(channel)
+        start = max(self._free.get(q, 0.0), now)
+        per = n_bytes / self.bandwidth / n_slices
+        dones = [start + self.latency + (i + 1) * per
+                 for i in range(n_slices)]
+        self.busy_s[channel] += dones[-1] - start
+        self._free[q] = dones[-1]
+        if self.tracer is not None:
+            prev = start
+            for i, d in enumerate(dones):
+                self.tracer.device_span(channel, prev, d,
+                                        n_bytes / n_slices,
+                                        link=self.link, label=label,
+                                        slice_idx=i)
+                prev = d
+        return dones
 
 
 @dataclass(frozen=True)
 class TierBudget:
-    """Per-tier page counts, preferred (fastest) tier first."""
+    """Per-tier page counts, preferred (fastest) tier first.
+
+    The leading ``n_promote`` tiers are PROMOTION-ONLY cache levels
+    (DESIGN.md SS17: the bonded global-buffer chiplet): fresh pages are
+    never assigned there — residency is earned by the EMA hot-page
+    promotion pass and lost by LRU demotion back to the base tier. The
+    remaining ordered levels behave as before: fresh pages land in the
+    fastest base tier with room and overflow into the last ("offload")
+    tier."""
     tiers: Tuple[Tuple[str, int], ...]     # ((level_name, n_pages), ...)
+    n_promote: int = 0                     # leading promotion-only levels
+
+    def __post_init__(self):
+        if not (0 <= self.n_promote < len(self.tiers)):
+            raise ValueError(
+                f"n_promote ({self.n_promote}) must leave at least one "
+                f"base tier out of {len(self.tiers)}")
 
     @property
     def total_pages(self) -> int:
         return sum(n for _, n in self.tiers)
 
     @property
+    def promote_tiers(self) -> Tuple[Tuple[str, int], ...]:
+        return self.tiers[:self.n_promote]
+
+    @property
+    def base_tiers(self) -> Tuple[Tuple[str, int], ...]:
+        return self.tiers[self.n_promote:]
+
+    @property
     def offload_tier(self) -> Optional[str]:
         """The slowest tier — spill target when the faster tiers are over
-        budget. None when the budget has a single tier (nowhere to spill)."""
-        return self.tiers[-1][0] if len(self.tiers) > 1 else None
+        budget. None when the budget has a single base tier (a promotion
+        cache is not spill capacity — nowhere to spill)."""
+        return (self.tiers[-1][0]
+                if len(self.tiers) - self.n_promote > 1 else None)
 
     @property
     def fast_pages(self) -> int:
-        """Pages the non-offload ("fast") tiers hold together."""
-        if len(self.tiers) == 1:
-            return self.tiers[0][1]
+        """Pages the non-offload ("fast") tiers hold together, promotion
+        levels included."""
+        if self.offload_tier is None:
+            return self.total_pages
         return sum(n for _, n in self.tiers[:-1])
 
     @classmethod
@@ -154,7 +230,13 @@ class TierBudget:
         N`` against it — an N-device mesh admits ~N× the pages within the
         same per-chip fast budget (the paper's per-chip constraint, not a
         fictitious pooled one). Shards are symmetric, so one budget models
-        every device."""
+        every device.
+
+        A KV tier that is a SIDE tier of the hierarchy (attached beside
+        the chain via ``with_side_tier`` — the bonded chiplet in
+        ``npu_hierarchy(chiplet=...)``) becomes a promotion-only level:
+        leading side tiers set ``n_promote`` so fresh pages skip them and
+        residency there is earned by the hot-page promotion pass."""
         if shards < 1:
             raise ValueError(f"shards ({shards}) must be >= 1")
         if cfg.n_kv_heads % shards:
@@ -186,7 +268,12 @@ class TierBudget:
             raise ValueError(
                 f"no KV-eligible tier in {kv_tiers} can hold even one "
                 f"{pb}-byte page")
-        return cls(tuple(tiers))
+        side = set(getattr(hier, "side_tiers", {}) or {})
+        n_promote = 0
+        while (n_promote < len(tiers) - 1
+               and tiers[n_promote][0] in side):
+            n_promote += 1
+        return cls(tuple(tiers), n_promote=n_promote)
 
 
 class PageAllocationError(RuntimeError):
@@ -209,6 +296,21 @@ class PrefixAllocation:
     """Result of a prefix-aware allocation."""
     pages: Tuple[int, ...]       # the sequence's full page list
     n_cached: int                # leading tokens whose KV is already valid
+
+
+@dataclass
+class ResidencyPlan:
+    """Pre-kernel half of the fetch-wait barrier (DESIGN.md SS17): tier
+    swaps are done, write-back is charged, and the demand fetches are
+    identified but NOT yet issued. Produced by ``plan_residency`` before
+    a kernel launches; after the kernel the engine knows its measured
+    compute time and calls ``charge_residency`` to issue the fetch —
+    bulk, or layer-sliced when overlap is on — and convert only the
+    un-hidden remainder into stall. Every plan must be charged exactly
+    once (fetch byte accounting lives in the charge)."""
+    seq_ids: Tuple[int, ...]
+    need: List[int]              # content-bearing offload pages to fetch
+    inflight_ready: float        # completion of earlier in-flight fetches
 
 
 def _chain_digest(parent: bytes, block: Sequence[int]) -> bytes:
@@ -236,6 +338,9 @@ class PagedKVManager:
                  dtype_bytes: int = 2,
                  page_nbytes: Optional[float] = None,
                  tier_device: Optional[SimulatedTierDevice] = None,
+                 chiplet_device: Optional[SimulatedTierDevice] = None,
+                 ema_decay: float = 0.5,
+                 promote_threshold: float = 1.5,
                  tracer: Optional[object] = None):
         if tier_budget is not None:
             n_pages = min(n_pages, tier_budget.total_pages + 1)
@@ -262,10 +367,32 @@ class PagedKVManager:
             if tier_budget is not None else {})
         self._offload = (tier_budget.offload_tier
                          if tier_budget is not None else None)
+        # promotion-only cache levels (SS17): the chiplet sits between the
+        # base fast tier and the offload tier; residency there is earned
+        # by the EMA pass below, never assigned fresh
+        self._promote_set = (frozenset(n for n, _ in
+                                       tier_budget.promote_tiers)
+                             if tier_budget is not None else frozenset())
+        self._chip = (tier_budget.tiers[0][0]
+                      if tier_budget is not None and tier_budget.n_promote
+                      else None)
+        self._base = (tier_budget.base_tiers[0][0]
+                      if tier_budget is not None else None)
+        self.chiplet_device = chiplet_device
+        self.ema_decay = ema_decay
+        self.promote_threshold = promote_threshold
+        self._ema: Dict[int, float] = {}      # page -> touch EMA
+        self._ema_round: Dict[int, int] = {}  # page -> round of last bump
+        self._round = 0                       # rebalance round counter
         self._lru: Dict[int, int] = {}        # page -> last-touch stamp
         self._stamp = 0
         self._ready_at: Dict[int, float] = {} # in-flight fetch completion
         self._fetch_pending: set = set()      # fetched, not yet waited on
+        # dirty = content NOT mirrored at the offload tier: written since
+        # allocation or since its last charged write-back. Spilling a
+        # clean content page is a residency flip (the offload copy is
+        # still valid) — only dirty content pays write-back bytes.
+        self._dirty: set = set()
         # offload observability (engine folds these into ServeStats)
         self.spill_bytes = 0.0
         self.fetch_bytes = 0.0
@@ -273,6 +400,15 @@ class PagedKVManager:
         self.n_fetches = 0
         self.prefetch_hits = 0
         self.prefetch_misses = 0
+        self.clean_demotions = 0   # content spills that skipped write-back
+        self.chiplet_promotions = 0
+        self.chiplet_demotions = 0
+        # per-direction DMA bytes keyed "src->dst" at each link boundary
+        # (reconciled against the trace's per-label span bytes)
+        self.channel_bytes: Dict[str, float] = {}
+        # landed-page reads per residency tier at each kernel barrier —
+        # the chiplet hit-rate numerator/denominator
+        self.tier_touches: Dict[str, int] = {}
         self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> 1
         self._seqs: Dict[int, _SeqAlloc] = {}
         self._ref: Dict[int, int] = {}                 # page -> refcount
@@ -428,14 +564,36 @@ class PagedKVManager:
         self._lru.pop(page, None)
         self._ready_at.pop(page, None)
         self._fetch_pending.discard(page)
+        self._dirty.discard(page)
+        self._ema.pop(page, None)
+        self._ema_round.pop(page, None)
+
+    def _mark_dirty(self, pages) -> None:
+        """Record that the given pages' content is (about to be) written
+        and therefore no longer mirrored at the offload tier. Over-marking
+        an empty page is harmless: write-back is only charged for victims
+        that carry content AND are dirty."""
+        self._dirty.update(pages)
+
+    def _acct(self, src: Optional[str], dst: Optional[str],
+              n_bytes: float) -> None:
+        if src is None or dst is None or n_bytes <= 0:
+            return
+        key = f"{src}->{dst}"
+        self.channel_bytes[key] = self.channel_bytes.get(key, 0.0) + n_bytes
 
     def _assign_tier(self, page: int) -> None:
-        """Fastest tier with budget room; overflow goes straight to the
-        offload tier (no churn during bulk prefill allocation — the
-        rebalance pass promotes what the kernels actually touch)."""
+        """Fastest BASE tier with budget room; overflow goes straight to
+        the offload tier (no churn during bulk prefill allocation — the
+        rebalance pass promotes what the kernels actually touch).
+        Promotion-only levels are skipped — chiplet residency is earned
+        by the EMA pass — except as a last resort when every base tier is
+        full (the pool is clamped to total_pages, which includes the
+        promote levels, so they must be able to absorb the tail)."""
         if self.tier_budget is None:
             return
-        for name, cap in self.tier_budget.tiers:
+        b = self.tier_budget
+        for name, cap in b.tiers[b.n_promote:] + b.tiers[:b.n_promote]:
             if self._tier_used[name] < cap:
                 self._tier[page] = name
                 self._tier_used[name] += 1
@@ -446,36 +604,110 @@ class PagedKVManager:
             "total_pages + 1 at construction)")
 
     def _spill_victims(self, pinned: set) -> List[int]:
-        """LRU-cold spill candidates, coldest first: fast-resident pages
-        that are neither pinned by the sequences being prepared nor have a
-        fetch in flight (demoting a page mid-migration would let its owner
-        consume a stale hit and attend over it for free). One sorted pass
-        per rebalance, popped in order, instead of a full scan per needed
-        page."""
+        """LRU-cold spill candidates, coldest first: BASE-fast-resident
+        pages that are neither pinned by the sequences being prepared nor
+        have a fetch in flight (demoting a page mid-migration would let
+        its owner consume a stale hit and attend over it for free).
+        Promotion-level residents are not spill capacity — they leave the
+        chiplet only via LRU demotion back to the base tier. One sorted
+        pass per rebalance, popped in order, instead of a full scan per
+        needed page."""
         return [p for _, p in sorted(
             (self._lru.get(p, 0), p) for p, tier in self._tier.items()
-            if tier != self._offload and p not in pinned
-            and p not in self._fetch_pending)]
+            if tier != self._offload and tier not in self._promote_set
+            and p not in pinned and p not in self._fetch_pending)]
 
-    def _ensure_fast(self, seq_ids: Sequence[int], now: float
-                     ) -> Tuple[float, int]:
-        """Issue one batched migration making the given sequences' pages
-        fast-tier resident: each offload-resident LANDED page swaps tiers
-        with an LRU-cold unpinned fast page (spill charged on the "out"
-        channel, the promotion on the "in" channel). Traffic follows
+    def _promote_pass(self, hot_candidates: set, now: float) -> None:
+        """EMA hot-page promotion into the chiplet level (DESIGN.md SS17).
+
+        Every rebalance round bumps a per-page touch EMA for the pinned
+        LANDED pages (``ema = ema * decay^rounds_since + 1``); a
+        base-tier-resident page whose EMA crosses the threshold — touched
+        on consecutive rounds — is promoted into the chiplet, demoting
+        the chiplet's LRU-cold unpinned resident back to the base tier
+        when it is full (the swap keeps per-tier counts). Migrations are
+        charged on the dedicated chiplet link ("in" promote / "out"
+        demote) but never gate a kernel: the page stays readable in its
+        source tier while the copy streams, so the charge is link
+        occupancy and trace visibility, not stall."""
+        if self._chip is None or not hot_candidates:
+            return
+        self._round += 1
+        rnd = self._round
+        chip = self._chip
+        cap = dict(self.tier_budget.tiers)[chip]
+        decay = self.ema_decay
+        hot: List[Tuple[float, int]] = []
+        for p in hot_candidates:
+            last = self._ema_round.get(p, rnd)
+            e = self._ema.get(p, 0.0) * (decay ** (rnd - last)) + 1.0
+            self._ema[p] = e
+            self._ema_round[p] = rnd
+            tier = self._tier.get(p)
+            if (e >= self.promote_threshold and tier is not None
+                    and tier != chip and tier != self._offload):
+                hot.append((e, p))
+        if not hot:
+            return
+        hot.sort(reverse=True)
+        cold = [p for _, p in sorted(
+            (self._lru.get(p, 0), p) for p, t in self._tier.items()
+            if t == chip and p not in hot_candidates
+            and p not in self._fetch_pending)]
+        ci = 0
+        n_promoted = 0
+        n_demoted = 0
+        for _, p in hot:
+            src = self._tier[p]
+            if self._tier_used[chip] < cap:
+                self._tier[p] = chip
+                self._tier_used[src] -= 1
+                self._tier_used[chip] += 1
+            elif ci < len(cold):
+                victim = cold[ci]
+                ci += 1
+                self._tier[victim] = src     # swap keeps per-tier counts
+                self._tier[p] = chip
+                n_demoted += 1
+            else:
+                break                        # chiplet full of hot pages
+            n_promoted += 1
+        pb = self.page_nbytes
+        base = self._base
+        if n_promoted:
+            self.chiplet_promotions += n_promoted
+            self._acct(base, chip, n_promoted * pb)
+            if self.chiplet_device is not None:
+                self.chiplet_device.transfer("in", n_promoted * pb, now,
+                                             label=f"{base}->{chip}")
+        if n_demoted:
+            self.chiplet_demotions += n_demoted
+            self._acct(chip, base, n_demoted * pb)
+            if self.chiplet_device is not None:
+                self.chiplet_device.transfer("out", n_demoted * pb, now,
+                                             label=f"{chip}->{base}")
+
+    def plan_residency(self, seq_ids: Sequence[int], now: float
+                       ) -> ResidencyPlan:
+        """Rebalance tiers for the given sequences' pages and charge the
+        out-channel traffic, WITHOUT issuing the demand fetch: each
+        offload-resident LANDED page swaps tiers with an LRU-cold
+        unpinned base-fast page, and becomes a fetch the returned plan
+        carries for ``charge_residency`` to issue. Traffic follows
         content, not capacity: reserved-but-unwritten pages (lookahead
         windows, un-prefilled tails) hold no KV, so they are pinned
         against spill and promoted for free when room remains, but never
         charge fetch bytes — mirroring the ``kv_tier_split`` landed-pages
-        rule. Likewise a spill victim is only charged if it carries
-        content (landed or cached-evictable). Pages that cannot fit — the
-        pinned working set itself exceeds the fast budget — stay
-        offload-resident and are *streamed*: the read is charged now and
-        will be charged again next block. Returns ``(ready_time,
-        n_pages_fetched)``; ``ready_time`` also covers still-in-flight
-        fetches issued by an earlier prefetch."""
-        if self.tier_budget is None or self._offload is None:
-            return now, 0
+        rule. A spill victim is only charged if it carries content
+        (landed or cached-evictable) AND is dirty — a clean victim's
+        offload copy is still valid, so its demotion is a free residency
+        flip (``clean_demotions``). Pages that cannot fit — the pinned
+        working set itself exceeds the fast budget — stay
+        offload-resident and are *streamed*: the read is charged per
+        block. Ends with the EMA chiplet promotion pass."""
+        seq_ids = tuple(seq_ids)
+        if self.tier_budget is None:
+            return ResidencyPlan(seq_ids, [], now)
         landed = self._landed_pages()
         pinned: set = set()
         need: List[int] = []                 # content-bearing: charged
@@ -485,6 +717,8 @@ class PagedKVManager:
                 if p in pinned:
                     continue
                 pinned.add(p)
+                if self._offload is None:
+                    continue
                 if self._tier.get(p) != self._offload:
                     continue
                 # skip pages whose fetch is already in flight (or landed
@@ -498,40 +732,145 @@ class PagedKVManager:
             t = self._ready_at.get(p)
             if t is not None and t > ready:
                 ready = t                    # prefetch still in flight
-        if not need and not empty:
-            return ready, 0
-        victims = self._spill_victims(pinned)
-        # evictable cached pages hold real KV too — spilling them costs
-        content = landed | set(self._evictable)
-        vi = 0
-        n_spilled = 0
-        for p in need + empty:               # recurring reads fill first
-            if vi >= len(victims):
-                break                        # fast full of pinned: stream
-            victim = victims[vi]
-            vi += 1
-            fast_tier = self._tier[victim]
-            self._tier[victim] = self._offload
-            self._tier[p] = fast_tier        # swap keeps per-tier counts
-            if victim in content:
-                n_spilled += 1
-        for p in pinned:                     # touch AFTER victim selection
-            self._touch(p)
+        if need or empty:
+            victims = self._spill_victims(pinned)
+            # evictable cached pages hold real KV too — spilling them costs
+            content = landed | set(self._evictable)
+            vi = 0
+            n_spilled = 0
+            n_clean = 0
+            for p in need + empty:           # recurring reads fill first
+                if vi >= len(victims):
+                    break                    # fast full of pinned: stream
+                victim = victims[vi]
+                vi += 1
+                fast_tier = self._tier[victim]
+                self._tier[victim] = self._offload
+                self._tier[p] = fast_tier    # swap keeps per-tier counts
+                if victim in content:
+                    if victim in self._dirty:
+                        n_spilled += 1       # write-back: content diverged
+                        self._dirty.discard(victim)
+                    else:
+                        n_clean += 1         # offload copy still valid
+            for p in pinned:                 # touch AFTER victim selection
+                self._touch(p)
+            pb = self.page_nbytes
+            if self.tier_device is not None and n_spilled:
+                self.tier_device.transfer(
+                    "out", n_spilled * pb, now,
+                    label=f"{self._base}->{self._offload}")
+            self.n_spills += n_spilled
+            self.spill_bytes += n_spilled * pb
+            self.clean_demotions += n_clean
+            self._acct(self._base, self._offload, n_spilled * pb)
+        self._promote_pass(pinned & landed, now)
+        return ResidencyPlan(seq_ids, need, ready)
+
+    def _issue_fetch(self, plan: ResidencyPlan, now: float,
+                     n_slices: int = 1) -> List[float]:
+        """Charge the plan's demand fetch on the in-channel — one bulk
+        batch, or one chained descriptor of ``n_slices`` layer slices —
+        and mark the pages in flight. Returns per-slice completion times
+        (empty when the plan carries no fetch)."""
+        need = plan.need
+        if not need:
+            return []
         pb = self.page_nbytes
-        done = now
-        if self.tier_device is not None:
-            if n_spilled:
-                self.tier_device.transfer("out", n_spilled * pb, now)
-            if need:
-                done = self.tier_device.transfer("in", len(need) * pb, now)
-        self.n_spills += n_spilled
-        self.spill_bytes += n_spilled * pb
         self.n_fetches += len(need)
         self.fetch_bytes += len(need) * pb
+        self._acct(self._offload, self._base, len(need) * pb)
+        label = f"{self._offload}->{self._base}"
+        if self.tier_device is None:
+            dones = [now]
+        elif n_slices > 1:
+            dones = self.tier_device.transfer_sliced(
+                "in", len(need) * pb, now, n_slices, label=label)
+        else:
+            dones = [self.tier_device.transfer(
+                "in", len(need) * pb, now, label=label)]
         for p in need:
-            self._ready_at[p] = done
+            self._ready_at[p] = dones[-1]
             self._fetch_pending.add(p)
-        return max(ready, done), len(need)
+        return dones
+
+    def _ensure_fast(self, seq_ids: Sequence[int], now: float
+                     ) -> Tuple[float, int]:
+        """Plan + bulk fetch in one step (the whole-block barrier shape):
+        returns ``(ready_time, n_pages_fetched)``; ``ready_time`` also
+        covers still-in-flight fetches issued by an earlier prefetch."""
+        plan = self.plan_residency(seq_ids, now)
+        dones = self._issue_fetch(plan, now)
+        done = dones[-1] if dones else now
+        return max(plan.inflight_ready, done), len(plan.need)
+
+    def charge_residency(self, plan: ResidencyPlan, now: float, *,
+                         n_slices: int = 1, compute_s: float = 0.0,
+                         per_seq: Optional[Dict[int, float]] = None
+                         ) -> Tuple[float, float]:
+        """Post-kernel half of the fetch-wait barrier: issue the plan's
+        demand fetch and return ``(stall, barrier_stall)``.
+
+        With ``n_slices > 1`` and a measured ``compute_s`` the fetch is a
+        chained descriptor of layer slices pipelined against the layer
+        loop (SS17): layer ``l`` computes as soon as its slice has landed
+        and the previous layer is done, so the stall is only the
+        un-hidden remainder ``max(0, pipeline_end - (now + compute_s))``.
+        ``barrier_stall`` is the whole-block counterfactual (what
+        ``n_slices=1`` would have stalled) — never smaller, reported so
+        the engine can attribute the savings. Consumes the prefetch
+        hit/miss accounting and counts per-tier landed-page touches (the
+        chiplet hit rate).
+
+        ``per_seq`` (optional out-param) receives each sequence's OWN
+        stall — its barrier wait scaled by the block's actual-to-barrier
+        stall ratio, so per-request attribution still sums to the block's
+        recorded stall under overlap (SS13 per-request accounting)."""
+        dones = self._issue_fetch(
+            plan, now, n_slices=n_slices if compute_s > 0 else 1)
+        base_ready = max(plan.inflight_ready, now)
+        bulk = dones[-1] if dones else now
+        barrier_stall = max(0.0, max(base_ready, bulk) - now)
+        if len(dones) > 1:
+            c = compute_s / len(dones)
+            t = now
+            for d in dones:
+                # layer l starts when its slice landed (inflight bulk
+                # transfers from an earlier prefetch gate every layer)
+                t = max(t, d, base_ready) + c
+            stall = max(0.0, t - (now + compute_s))
+        else:
+            stall = barrier_stall
+        if per_seq is not None:
+            scale = (stall / barrier_stall) if barrier_stall > 1e-12 else 0.0
+            for sid in plan.seq_ids:
+                own = now
+                for p in self._seqs[sid].pages:
+                    t = self._ready_at.get(p)
+                    if t is not None and t > own:
+                        own = t
+                per_seq[sid] = (per_seq.get(sid, 0.0)
+                                + max(0.0, own - now) * scale)
+        for sid in plan.seq_ids:
+            s = self._seqs[sid]
+            for p in s.pages[:self.pages_needed(s.n_written)]:
+                tier = self._tier.get(p)
+                if tier is not None:
+                    self.tier_touches[tier] = (
+                        self.tier_touches.get(tier, 0) + 1)
+            for p in s.pages:
+                if p not in self._fetch_pending:
+                    continue
+                self._fetch_pending.discard(p)
+                hit = self._ready_at.get(p, now) <= now
+                if hit:
+                    self.prefetch_hits += 1
+                    self._ready_at.pop(p, None)
+                else:
+                    self.prefetch_misses += 1
+                if self.tracer is not None:
+                    self.tracer.prefetch(p, hit, now)
+        return stall, barrier_stall
 
     def prefetch_seqs(self, seq_ids: Sequence[int], now: float,
                       lookahead_seqs: Sequence[int] = ()) -> float:
@@ -551,7 +890,7 @@ class PagedKVManager:
         ready, n_fetched = self._ensure_fast(seq_ids, now)
         if (lookahead_seqs and self.tier_device is not None
                 and n_fetched == 0
-                and self.tier_device._free["in"] <= now):
+                and self.tier_device.idle("in", now)):
             deepest = max(lookahead_seqs,
                           key=lambda s: self._seqs[s].n_written)
             self._ensure_fast([deepest], now)
@@ -562,37 +901,12 @@ class PagedKVManager:
         """Fetch-wait barrier before a kernel launch: demand-fetches any
         page still offload-resident (a prefetch miss) and returns the
         stall the kernel must absorb until every page's migration
-        completes. Consumes the prefetch hit/miss accounting: a fetched
-        page whose migration finished by ``now`` is a hit.
-
-        ``per_seq`` (optional out-param) receives each sequence's OWN
-        stall — the wait until just ITS pages are resident. The batch
-        barrier is the max over sequences, so per-seq attribution shows
-        which request's working set actually gated the block (SS13
-        deferred item: per-request stall accounting)."""
-        ready, _ = self._ensure_fast(seq_ids, now)
-        if per_seq is not None:
-            for sid in seq_ids:
-                own = now
-                for p in self._seqs[sid].pages:
-                    t = self._ready_at.get(p)
-                    if t is not None and t > own:
-                        own = t
-                per_seq[sid] = per_seq.get(sid, 0.0) + max(0.0, own - now)
-        for sid in seq_ids:
-            for p in self._seqs[sid].pages:
-                if p not in self._fetch_pending:
-                    continue
-                self._fetch_pending.discard(p)
-                hit = self._ready_at.get(p, now) <= now
-                if hit:
-                    self.prefetch_hits += 1
-                    self._ready_at.pop(p, None)
-                else:
-                    self.prefetch_misses += 1
-                if self.tracer is not None:
-                    self.tracer.prefetch(p, hit, now)
-        return max(0.0, ready - now)
+        completes. The whole-block-barrier composition of
+        ``plan_residency`` + ``charge_residency`` — the engine's
+        ``--no-layer-overlap`` baseline and the direct-manager API."""
+        plan = self.plan_residency(seq_ids, now)
+        stall, _ = self.charge_residency(plan, now, per_seq=per_seq)
+        return stall
 
     # ---------------------------- allocation --------------------------- #
     def allocate(self, seq_id: int, n_tokens: int, *,
@@ -615,6 +929,7 @@ class PagedKVManager:
             pages.append(p)
         self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens,
                                        n_written=n_tokens)
+        self._mark_dirty(pages)      # fresh KV: nothing mirrored offload
         return list(pages)
 
     def allocate_shared(self, seq_id: int, tokens: Sequence[int], *,
@@ -694,6 +1009,9 @@ class PagedKVManager:
             pages.append(p)
         self._seqs[seq_id] = _SeqAlloc(pages=pages, n_tokens=n_tokens,
                                        n_written=n_tokens)
+        # fresh + COW pages will be written; reused shared pages keep
+        # whatever dirty state their history earned
+        self._mark_dirty(pages[len(shared):])
         self.dedup_hits += len(shared)
         self.dedup_tokens += n_cached + partial
         return PrefixAllocation(tuple(pages), n_cached + partial)
@@ -717,9 +1035,11 @@ class PagedKVManager:
             s.pages[idx] = dst
             self._pending_copies.append((page, dst))
             self.cow_copies += 1
+            self._mark_dirty((dst,))
             return (page, dst)
         if page in self._page_key:
             self._unregister_page(page)
+        self._mark_dirty((page,))    # about to be written in place
         return None
 
     # ------------------------ lookahead reservation --------------------- #
@@ -771,6 +1091,10 @@ class PagedKVManager:
             self._incref(p)
             s.pages.append(p)
             claimed.append(p)
+        # every page in the write window is about to diverge from any
+        # offload mirror it had
+        self._mark_dirty(s.pages[i] for i in window_have)
+        self._mark_dirty(claimed)
         return claimed
 
     def commit_tokens(self, seq_id: int, n: int) -> None:
@@ -781,8 +1105,10 @@ class PagedKVManager:
             raise ValueError(
                 f"commit of {n} tokens for seq {seq_id} exceeds its "
                 f"reserved pages (reserve_ahead first)")
+        lo = s.n_tokens // self.page_size
         s.n_tokens += n
         s.n_written = s.n_tokens
+        self._mark_dirty(s.pages[lo:self.pages_needed(s.n_tokens)])
 
     def commit_speculative(self, seq_id: int, n_accepted: int) -> int:
         """Partial rollback after a speculative verify pass (DESIGN.md
@@ -808,7 +1134,10 @@ class PagedKVManager:
         pages the prefill has not reached yet are priced as capacity, not
         attention/migration traffic (the ``_landed_pages`` rule)."""
         s = self._seqs[seq_id]
+        lo = s.n_written // self.page_size
         s.n_written = max(0, min(n, s.n_tokens))
+        if s.n_written > lo * self.page_size:
+            self._mark_dirty(s.pages[lo:self.pages_needed(s.n_written)])
 
     def release_reserved(self, seq_id: int) -> int:
         """Return reserved-but-unwritten pages (past the landed extent) to
@@ -834,8 +1163,9 @@ class PagedKVManager:
             new_page = self._take_page()
             self._incref(new_page)
             s.pages.append(new_page)
+            self._mark_dirty((new_page,))
         else:
-            self.ensure_writable(seq_id, s.n_tokens)
+            self.ensure_writable(seq_id, s.n_tokens)  # marks dirty
         s.n_tokens += 1
         s.n_written = s.n_tokens
         return new_page

@@ -49,11 +49,14 @@ PID_REQUESTS = 1         # one thread (track) per request id
 PID_DEVICE = 2           # engine + stream + DMA-channel tracks
 TID_ENGINE = 0
 TID_DMA_IN = 1           # fetch: offload -> fast
-TID_DMA_OUT = 2          # spill: fast -> offload
+TID_DMA_OUT = 2          # spill/write-back: fast -> offload
 TID_PREFILL = 3          # prefill stream (overlapped engine, SS16)
 TID_DECODE = 4           # decode stream
+TID_CHIP_IN = 5          # chiplet link: promotion (base -> chiplet, SS17)
+TID_CHIP_OUT = 6         # chiplet link: demotion (chiplet -> base)
 _DEVICE_TIDS = {"engine": TID_ENGINE, "in": TID_DMA_IN, "out": TID_DMA_OUT,
-                "prefill": TID_PREFILL, "decode": TID_DECODE}
+                "prefill": TID_PREFILL, "decode": TID_DECODE,
+                "chiplet:in": TID_CHIP_IN, "chiplet:out": TID_CHIP_OUT}
 
 
 @dataclass
@@ -78,6 +81,9 @@ class TraceRecorder:
         self._req: Dict[int, _ReqTrace] = {}
         self._events: List[dict] = []      # chrome events, ts/dur in raw s
         self.stall_total = 0.0             # sum of absorbed batch stalls
+        # DMA bytes by "src->dst" label, accumulated from device spans —
+        # reconciled against the KV manager's channel_bytes counters
+        self.dma_bytes: Dict[str, float] = {}
         self._t_base: Optional[float] = None
         self.t_final: Optional[float] = None
 
@@ -125,12 +131,27 @@ class TraceRecorder:
                          max(t1, t0), args)
 
     def device_span(self, channel: str, t0: float, t1: float,
-                    n_bytes: float) -> None:
-        """One batched DMA transfer on the in (fetch) / out (spill)
-        channel — emitted by ``SimulatedTierDevice.transfer``."""
+                    n_bytes: float, *, link: str = "hbs",
+                    label: Optional[str] = None,
+                    slice_idx: Optional[int] = None) -> None:
+        """One batched DMA transfer (or one layer slice of a chained
+        descriptor, ``slice_idx`` set) — emitted by
+        ``SimulatedTierDevice.transfer`` / ``transfer_sliced``. ``link``
+        routes chiplet-link migrations to their own tracks; ``label`` is
+        the "src->dst" tier pair whose bytes are accumulated for the
+        per-channel reconcile."""
+        track = channel if link != "chiplet" else f"chiplet:{channel}"
         name = "fetch" if channel == "in" else "spill"
-        self._span_event(PID_DEVICE, _DEVICE_TIDS[channel], name, t0,
-                         max(t1, t0), {"bytes": n_bytes})
+        if link == "chiplet":
+            name = "promote" if channel == "in" else "demote"
+        args = {"bytes": n_bytes}
+        if label is not None:
+            args["link"] = label
+            self.dma_bytes[label] = self.dma_bytes.get(label, 0.0) + n_bytes
+        if slice_idx is not None:
+            args["slice"] = slice_idx
+        self._span_event(PID_DEVICE, _DEVICE_TIDS[track], name, t0,
+                         max(t1, t0), args)
 
     def prefetch(self, page: int, hit: bool, t: float) -> None:
         """Prefetch-hit/miss resolution, from the KV manager's fetch-wait
@@ -348,6 +369,7 @@ class TraceRecorder:
     def reconcile(self, *, stall_s: float, ttft: Sequence[float],
                   itl: Sequence[float], new_tokens: int,
                   stall_by_rid: Optional[Dict[int, float]] = None,
+                  channel_bytes: Optional[Dict[str, float]] = None,
                   tol: float = 1e-6, strict: bool = True
                   ) -> Dict[str, object]:
         """Audit ``ServeStats`` aggregates against the trace events.
@@ -358,7 +380,10 @@ class TraceRecorder:
         * the trace's absorbed-stall spans sum to ``stall_s``;
         * each request's stall segments sum to its ``stall_by_rid`` entry;
         * the trace's token instants reproduce the TTFT and ITL sample
-          sets and the emitted-token count.
+          sets and the emitted-token count;
+        * the per-"src->dst" DMA span bytes match the manager's
+          ``channel_bytes`` counters (SS17 per-channel accounting), when
+          given.
 
         Returns a report dict; with ``strict`` raises ``AssertionError``
         listing every failed check (counters may not silently drift)."""
@@ -366,6 +391,14 @@ class TraceRecorder:
 
         def close(a: float, b: float) -> bool:
             return abs(a - b) <= tol
+
+        if channel_bytes is not None:
+            for key in sorted(set(self.dma_bytes) | set(channel_bytes)):
+                got = self.dma_bytes.get(key, 0.0)
+                want = channel_bytes.get(key, 0.0)
+                if abs(got - want) > max(tol, 1e-9 * max(got, want)):
+                    fails.append(f"channel {key}: trace {got:.3f}B != "
+                                 f"stats {want:.3f}B")
 
         for rid in self._req:
             bd = self.breakdown(rid)
@@ -437,6 +470,12 @@ class TraceRecorder:
              "name": "thread_name", "args": {"name": "stream:prefill"}},
             {"ph": "M", "pid": PID_DEVICE, "tid": TID_DECODE,
              "name": "thread_name", "args": {"name": "stream:decode"}},
+            {"ph": "M", "pid": PID_DEVICE, "tid": TID_CHIP_IN,
+             "name": "thread_name",
+             "args": {"name": "chiplet:in (promote)"}},
+            {"ph": "M", "pid": PID_DEVICE, "tid": TID_CHIP_OUT,
+             "name": "thread_name",
+             "args": {"name": "chiplet:out (demote)"}},
         ]
         for rid in sorted(self._req):
             events.append({"ph": "M", "pid": PID_REQUESTS, "tid": rid,

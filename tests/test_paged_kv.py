@@ -151,14 +151,20 @@ def test_tier_budget_and_split():
     assert dict(tb.tiers)["chiplet"] == int(0.1e6 // pb)
     assert dict(tb.tiers)["ddr"] == int(1e6 // pb)
 
+    # the chiplet is a promote-only level (SS17): fresh allocations land
+    # in the base tiers and the chiplet fills by promotion, never by
+    # first-touch assignment
+    assert tb.n_promote == 1
+    assert tb.promote_tiers == tb.tiers[:1]
+    assert tb.offload_tier == "hbs"
+
     kv = PagedKVManager(n_pages=10_000, page_size=16, tier_budget=tb)
     assert kv.n_pages == tb.total_pages + 1            # budget caps the pool
     n_chip = dict(tb.tiers)["chiplet"]
-    kv.allocate(0, (n_chip + 3) * 16)                  # overflow the chiplet
+    kv.allocate(0, (n_chip + 3) * 16)      # would have overflowed the chiplet
     split = kv.kv_tier_split()
-    assert [s[0] for s in split] == ["chiplet", "ddr"]
+    assert [s[0] for s in split] == ["ddr"]            # chiplet stays empty
     assert abs(sum(f for _, f in split) - 1.0) < 1e-9
-    assert split[0][1] == pytest.approx(n_chip / (n_chip + 3))
 
 
 # ---------------------------- scheduler -------------------------------- #

@@ -489,3 +489,320 @@ def test_offload_stats_reach_serve_stats(small_model):
     assert 0.0 <= s.prefetch_hit_rate <= 1.0
     # stall feeds the latency metrics: decode+prefill wall time covers it
     assert s.prefill_s + s.decode_s >= s.stall_s
+
+
+# -------------- three-level chiplet residency (DESIGN.md SS17) ---------- #
+
+def _kv3(chip=2, fast=4, offload=16, *, bw=1e6, lat=1e-3, chip_bw=1e9,
+         chip_lat=0.0, page_size=4, n_pages=64, **kw):
+    """chiplet (promotion-only) / ddr / hbs manager for the SS17 tests."""
+    tb = TierBudget((("chiplet", chip), ("ddr", fast), ("hbs", offload)),
+                    n_promote=1)
+    dev = SimulatedTierDevice(bandwidth=bw, latency=lat)
+    cdev = SimulatedTierDevice(bandwidth=chip_bw, latency=chip_lat,
+                               link="chiplet")
+    return PagedKVManager(n_pages, page_size, tier_budget=tb,
+                          page_nbytes=PB, tier_device=dev,
+                          chiplet_device=cdev, **kw)
+
+
+def test_three_level_budget_split_and_fresh_pages_skip_chiplet():
+    """Satellite regression: a 3-level budget keeps the chiplet
+    promotion-only — fresh pages land in ddr, overflow to hbs, and
+    ``kv_tier_split`` stays a distribution over the tiers actually
+    holding landed KV."""
+    kv = _kv3(chip=2, fast=2, offload=16)
+    assert kv.tier_budget.n_promote == 1
+    assert kv.tier_budget.promote_tiers == (("chiplet", 2),)
+    assert kv.tier_budget.offload_tier == "hbs"
+    assert kv.tier_budget.fast_pages == 4          # chiplet + ddr
+    kv.allocate(0, 4 * 4)                          # 2 ddr + 2 hbs overflow
+    assert kv.tier_occupancy_pages()["chiplet"] == 0
+    assert [kv.page_tier(p) for p in kv.seq_pages(0)] == (
+        ["ddr"] * 2 + ["hbs"] * 2)
+    split = dict(kv.kv_tier_split())
+    assert "chiplet" not in split
+    assert split["ddr"] == pytest.approx(0.5)
+    assert split["hbs"] == pytest.approx(0.5)
+    _check_residency(kv)
+    # two consecutive hot rounds earn chiplet residency, and the split
+    # then reports the promoted fraction
+    kv.residency_stall([0], 0.0)
+    kv.residency_stall([0], 1.0)
+    assert kv.tier_occupancy_pages()["chiplet"] == 2
+    assert dict(kv.kv_tier_split()).get("chiplet", 0.0) > 0.0
+    _check_residency(kv)
+
+
+def test_chiplet_promotion_needs_consecutive_touches():
+    kv = _kv3(chip=2, fast=4, offload=16)
+    kv.allocate(0, 2 * 4)                          # 2 landed ddr pages
+    assert kv.residency_stall([0], 0.0) == 0.0     # round 1: EMA 1.0
+    assert kv.chiplet_promotions == 0
+    kv.residency_stall([0], 1.0)                   # round 2: EMA 1.5
+    assert kv.chiplet_promotions == 2
+    assert all(kv.page_tier(p) == "chiplet" for p in kv.seq_pages(0))
+    assert kv.channel_bytes["ddr->chiplet"] == 2 * PB
+    assert "chiplet->ddr" not in kv.channel_bytes  # room: no demotion
+    _check_residency(kv)
+
+
+def test_chiplet_lru_demotion_swaps_cold_resident():
+    kv = _kv3(chip=1, fast=4, offload=16)
+    kv.allocate(0, 4)
+    kv.allocate(1, 4)
+    kv.residency_stall([0], 0.0)
+    kv.residency_stall([0], 1.0)                   # seq 0 promoted
+    p0, p1 = kv.seq_pages(0)[0], kv.seq_pages(1)[0]
+    assert kv.page_tier(p0) == "chiplet"
+    kv.residency_stall([1], 2.0)
+    kv.residency_stall([1], 3.0)                   # seq 1 hot, chiplet full
+    assert kv.page_tier(p1) == "chiplet"           # swapped in
+    assert kv.page_tier(p0) == "ddr"               # cold resident demoted
+    assert kv.chiplet_promotions == 2 and kv.chiplet_demotions == 1
+    assert kv.channel_bytes["chiplet->ddr"] == PB
+    _check_residency(kv)
+
+
+def test_dirty_writeback_vs_free_clean_demotion():
+    """A spill victim is charged only when its content diverged from the
+    offload copy; re-demoting an unmodified page is a free residency
+    flip, and writing into it re-arms the write-back."""
+    kv = _kv(fast=1, offload=16)
+    kv.allocate(0, 3)                              # page A in ddr, dirty
+    kv.allocate(1, 3)                              # page B in hbs
+    kv.residency_stall([1], 0.0)                   # B in, A out: write-back
+    assert kv.n_spills == 1 and kv.spill_bytes == PB
+    kv.residency_stall([0], 1.0)                   # A in, B out: B dirty too
+    assert kv.n_spills == 2 and kv.spill_bytes == 2 * PB
+    assert kv.clean_demotions == 0
+    kv.residency_stall([1], 2.0)                   # A out again: now clean
+    assert kv.n_spills == 2 and kv.spill_bytes == 2 * PB
+    assert kv.clean_demotions == 1
+    kv.residency_stall([0], 3.0)                   # B out again: also clean
+    assert kv.clean_demotions == 2
+    assert kv.channel_bytes["ddr->hbs"] == 2 * PB  # only charged spills
+    kv.append_token(0)                             # A's content diverges
+    kv.residency_stall([1], 4.0)                   # A out: charged again
+    assert kv.n_spills == 3 and kv.spill_bytes == 3 * PB
+    _check_residency(kv)
+
+
+# ------------------- layer-sliced migration (SS17) --------------------- #
+
+def test_transfer_sliced_chain_matches_bulk_transfer():
+    dev = SimulatedTierDevice(bandwidth=1e5, latency=1e-3)
+    dones = dev.transfer_sliced("in", 4 * PB, 0.0, 4)
+    per = PB / 1e5
+    # issue latency charged once; slice l lands at latency + (l+1)*per
+    assert dones == pytest.approx([1e-3 + (i + 1) * per for i in range(4)])
+    bulk = SimulatedTierDevice(bandwidth=1e5, latency=1e-3).transfer(
+        "in", 4 * PB, 0.0)
+    assert dones[-1] == pytest.approx(bulk)        # last slice == bulk done
+    # the chain is ONE queued command: the channel frees at the last slice
+    assert not dev.idle("in", dones[-1] - 1e-9)
+    assert dev.idle("in", dones[-1])
+    # n_slices=1 degenerates to the bulk transfer
+    one = SimulatedTierDevice(bandwidth=1e5, latency=1e-3)
+    assert one.transfer_sliced("in", 4 * PB, 0.0, 1) == [
+        pytest.approx(bulk)]
+
+
+def test_shared_writeback_link_serializes_directions():
+    full = SimulatedTierDevice(bandwidth=1e5, latency=0.0)
+    assert full.transfer("out", PB, 0.0) == pytest.approx(PB / 1e5)
+    assert full.transfer("in", PB, 0.0) == pytest.approx(PB / 1e5)
+    shared = SimulatedTierDevice(bandwidth=1e5, latency=0.0, duplex=False)
+    s_out = shared.transfer("out", PB, 0.0)
+    assert s_out == pytest.approx(PB / 1e5)
+    assert not shared.idle("in", s_out - 1e-9)     # one queue for both
+    assert shared.transfer("in", PB, 0.0) == pytest.approx(2 * PB / 1e5)
+
+
+def test_plan_charge_pipeline_stall_bounded_by_barrier():
+    """The split fetch-wait barrier: with layer slices pipelined against
+    the layer loop the stall is only the un-hidden remainder, strictly
+    below the whole-block counterfactual; n_slices=1 reproduces the
+    barrier (and ``residency_stall``) exactly."""
+    C = 0.02                                       # measured block compute
+    kv = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv.allocate(0, 4 * 4)                          # 2-page demand fetch
+    plan = kv.plan_residency([0], 0.0)
+    assert len(plan.need) == 2
+    per_seq = {}
+    stall, barrier = kv.charge_residency(plan, 0.0, n_slices=4,
+                                         compute_s=C, per_seq=per_seq)
+    assert barrier == pytest.approx(1e-3 + 2 * PB / 1e5)
+    # slices land at 6/11/16/21ms, layers take 5ms each -> ends at 26ms
+    assert stall == pytest.approx(0.006)
+    assert stall < barrier
+    # per-request attribution still sums to the block's recorded stall
+    assert sum(per_seq.values()) == pytest.approx(stall)
+
+    kv1 = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv1.allocate(0, 4 * 4)
+    s1, b1 = kv1.charge_residency(kv1.plan_residency([0], 0.0), 0.0,
+                                  n_slices=1, compute_s=C)
+    assert s1 == b1 == pytest.approx(barrier)
+    kv2 = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv2.allocate(0, 4 * 4)
+    assert kv2.residency_stall([0], 0.0) == pytest.approx(s1)
+    # zero measured compute cannot hide anything: slicing is skipped
+    kv3 = _kv(fast=2, offload=16, bw=1e5, lat=1e-3)
+    kv3.allocate(0, 4 * 4)
+    s3, b3 = kv3.charge_residency(kv3.plan_residency([0], 0.0), 0.0,
+                                  n_slices=4, compute_s=0.0)
+    assert s3 == b3
+
+
+# ------------- per-channel byte accounting (SS17 satellite) ------------- #
+
+def test_channel_bytes_reconcile_against_trace_dma_spans():
+    from repro.serving import TraceRecorder
+
+    tr = TraceRecorder()
+    kv = _kv3(chip=2, fast=2, offload=16, bw=1e5, lat=1e-3, tracer=tr)
+    kv.tier_device.tracer = tr
+    kv.chiplet_device.tracer = tr
+    kv.allocate(0, 4 * 4)                   # 2 ddr + 2 hbs
+    kv.residency_stall([0], 0.0)            # streams 2 pages in
+    kv.allocate(1, 4)                       # lands hbs (ddr pinned-full)
+    kv.residency_stall([1], 1.0)            # spill + fetch
+    kv.residency_stall([1], 2.0)            # promote seq 1's page
+    assert kv.chiplet_promotions > 0
+    got = dict(kv.channel_bytes)
+    assert set(got) >= {"hbs->ddr", "ddr->chiplet"}
+    assert tr.dma_bytes == got              # trace spans carry the labels
+    report = tr.reconcile(stall_s=tr.stall_total, ttft=[], itl=[],
+                          new_tokens=0, channel_bytes=got)
+    assert report["ok"]
+    bad = dict(got)
+    bad["hbs->ddr"] = bad["hbs->ddr"] + 5 * PB
+    with pytest.raises(AssertionError):
+        tr.reconcile(stall_s=tr.stall_total, ttft=[], itl=[],
+                     new_tokens=0, channel_bytes=bad)
+
+
+def test_hypothesis_three_level_invariants_over_random_traces():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(st.integers(0, 6),      # op kind
+                             st.integers(0, 5),      # seq id
+                             st.integers(1, 40)),    # size / k
+                   min_size=1, max_size=80)
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=ops)
+    def run(ops):
+        kv = _kv3(chip=2, fast=3, offload=10, n_pages=32, bw=1e4, lat=1e-3)
+        t = 0.0
+        for kind, sid, n in ops:
+            t += 0.01
+            try:
+                if kind == 0 and sid not in kv._seqs:
+                    kv.allocate(sid, n)
+                elif kind == 1 and sid in kv._seqs:
+                    kv.free_seq(sid)
+                elif kind == 2 and sid in kv._seqs:
+                    kv.reserve_ahead(sid, n % 8 + 1)
+                elif kind == 3 and sid in kv._seqs:
+                    kv.release_reserved(sid)
+                elif kind == 4 and sid in kv._seqs:
+                    kv.prefetch_seqs([sid], t)
+                elif kind == 5 and sid in kv._seqs:
+                    stall = kv.residency_stall([sid], t)
+                    assert stall >= 0.0
+                    t += stall
+                elif kind == 6 and sid in kv._seqs:
+                    compute = 0.01 * (n % 3)
+                    plan = kv.plan_residency([sid], t)
+                    stall, barrier = kv.charge_residency(
+                        plan, t, n_slices=4, compute_s=compute)
+                    # overlap is never worse than the barrier it replaces
+                    assert 0.0 <= stall <= barrier + 1e-12
+                    t += stall + compute
+            except PageAllocationError:
+                pass                                  # admission pressure
+            _check_residency(kv)
+        for sid in list(kv._seqs):
+            kv.free_seq(sid)
+        _check_residency(kv)
+        assert sum(kv.tier_occupancy_pages().values()) == 0
+        # chiplet traffic is conserved: bytes == page moves on that link
+        assert kv.channel_bytes.get("ddr->chiplet", 0.0) == (
+            kv.chiplet_promotions * PB)
+        assert kv.channel_bytes.get("chiplet->ddr", 0.0) == (
+            kv.chiplet_demotions * PB)
+
+    run()
+
+
+# ------------------- engine-level SS17 behaviour ------------------------ #
+
+def _chiplet_hierarchy(cfg, fast_pages, chiplet_pages, page_size=8):
+    from repro.core import hbs, lpddr6, npu_hierarchy, sram_chiplet
+    from repro.serving.kv_manager import page_bytes
+
+    pb = page_bytes(cfg, page_size, 4)
+    return npu_hierarchy(lpddr6(capacity_gb=fast_pages * pb / 1e9),
+                         hbs(8.0, latency_us=20.0, capacity_gb=1.0),
+                         chiplet=sram_chiplet(
+                             512.0, capacity_mb=chiplet_pages * pb / 1e6))
+
+
+@pytest.mark.slow
+def test_engine_layer_overlap_token_identical_and_never_worse(small_model):
+    """Tentpole acceptance at engine level: layer-sliced migration is
+    token-identical to both the no-offload and the whole-block-barrier
+    runs, never stalls more than its own barrier counterfactual, and the
+    ``--no-layer-overlap`` baseline reports zero savings."""
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(6)
+    reqs = [rng.integers(1, cfg.vocab, size=n).tolist()
+            for n in (20, 9, 14)]
+    kw = dict(max_len=40, scheduler="continuous", page_size=8, max_batch=3,
+              prefill_budget=96)
+    base = ServeEngine(cfg, params, opts, **kw)
+    want = base.serve([r[:] for r in reqs], 8)
+    hier = _offload_hierarchy(cfg, fast_pages=4)
+    okw = dict(hierarchy=hier, hbs_gbps=1e-3, hbs_latency_us=500.0)
+
+    overlap = ServeEngine(cfg, params, opts, **kw, **okw)
+    assert overlap.n_layer_slices == cfg.n_layers == 2
+    assert overlap.serve([r[:] for r in reqs], 8) == want
+    barrier = ServeEngine(cfg, params, opts, **kw, **okw,
+                          layer_overlap=False)
+    assert barrier.n_layer_slices == 1
+    assert barrier.serve([r[:] for r in reqs], 8) == want
+    assert barrier.stats.stall_saved_s == 0.0
+    # within-run counterfactual: stall + saved is what the barrier would
+    # have recorded, so overlap can only help
+    assert overlap.stats.stall_saved_s > 0.0
+    assert overlap.stats.stall_s <= (
+        overlap.stats.stall_s + overlap.stats.stall_saved_s)
+
+
+def test_engine_chiplet_promotions_and_channel_stats(small_model):
+    from repro.serving import ServeEngine
+
+    cfg, opts, params = small_model
+    rng = np.random.default_rng(7)
+    reqs = [rng.integers(1, cfg.vocab, size=16).tolist() for _ in range(3)]
+    kw = dict(max_len=32, scheduler="continuous", page_size=8, max_batch=3,
+              prefill_budget=96)
+    base = ServeEngine(cfg, params, opts, **kw)
+    want = base.serve([r[:] for r in reqs], 8)
+    hier = _chiplet_hierarchy(cfg, fast_pages=3, chiplet_pages=2)
+    eng = ServeEngine(cfg, params, opts, **kw, hierarchy=hier,
+                      hbs_gbps=0.01, hbs_latency_us=20.0,
+                      chiplet_gbps=512.0, chiplet_latency_us=0.05)
+    assert eng.serve([r[:] for r in reqs], 8) == want
+    s = eng.stats
+    assert s.chiplet_promotions > 0
+    assert 0.0 < s.chiplet_hit_rate <= 1.0
+    assert s.tier_touches.get("chiplet", 0) > 0
+    assert s.channel_bytes.get("ddr->chiplet", 0.0) == pytest.approx(
+        s.chiplet_promotions * eng.page_nbytes)
