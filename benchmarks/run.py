@@ -9,7 +9,6 @@ Run: PYTHONPATH=src python -m benchmarks.run [--only fig1,table1]
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 from benchmarks import common

@@ -7,18 +7,44 @@ trace-event format — the same structural validation the golden-trace
 test applies — plus the breakdown metadata's conservation invariant
 (per-request phase sums equal end-to-end latency).
 
-Usage: PYTHONPATH=src python scripts/check_trace.py trace.json
+``--strict-vocab`` additionally cross-checks every DMA channel label the
+runtime emitted (the ``link`` arg on fetch/spill/promote/demote spans,
+and any ``metadata.channel_bytes`` keys) against the fixed ``src->dst``
+vocabulary in :mod:`repro.serving.channels` — the same constant the
+static ``channel-vocab`` rule enforces on source literals, so the trace
+and the tree cannot drift apart.
+
+Usage: PYTHONPATH=src python scripts/check_trace.py [--strict-vocab] trace.json
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
+from repro.serving.channels import CHANNEL_LABELS
 from repro.serving.trace import PHASES, validate_chrome_trace
 
 
-def main(path: str) -> int:
-    with open(path) as f:
+def _trace_labels(doc: dict) -> set:
+    labels = set()
+    for ev in doc.get("traceEvents", []):
+        link = ev.get("args", {}).get("link")
+        if isinstance(link, str):
+            labels.add(link)
+    labels |= set(doc.get("metadata", {}).get("channel_bytes", {}))
+    return labels
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="Chrome trace-event JSON to validate")
+    ap.add_argument("--strict-vocab", action="store_true",
+                    help="fail on channel labels outside "
+                         "repro.serving.channels.CHANNEL_LABELS")
+    args = ap.parse_args(argv)
+
+    with open(args.path) as f:
         doc = json.load(f)
     counts = validate_chrome_trace(doc)
     breakdowns = doc.get("metadata", {}).get("breakdowns", {})
@@ -31,15 +57,24 @@ def main(path: str) -> int:
             print(f"[check_trace] FAIL: request {rid} phase sum {parts} "
                   f"!= e2e {bd['e2e_s']}")
             return 1
-    print(f"[check_trace] OK: {path} — {counts['X']} spans, "
+
+    labels = _trace_labels(doc)
+    if args.strict_vocab:
+        rogue = sorted(labels - set(CHANNEL_LABELS))
+        if rogue:
+            print(f"[check_trace] FAIL: channel label(s) {rogue} not in "
+                  f"the fixed vocabulary {list(CHANNEL_LABELS)} "
+                  f"(repro/serving/channels.py)")
+            return 1
+
+    vocab_note = (f", {len(labels)} channel label(s) in vocabulary"
+                  if args.strict_vocab else "")
+    print(f"[check_trace] OK: {args.path} — {counts['X']} spans, "
           f"{counts['i']} instants, {counts['M']} metadata events, "
           f"{len(breakdowns)} request breakdowns conserve time "
-          f"(worst drift {worst:.2e}s)")
+          f"(worst drift {worst:.2e}s){vocab_note}")
     return 0
 
 
 if __name__ == "__main__":
-    if len(sys.argv) != 2:
-        print(__doc__)
-        sys.exit(2)
-    sys.exit(main(sys.argv[1]))
+    sys.exit(main())

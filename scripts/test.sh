@@ -13,6 +13,13 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=1 ${XLA_FLAGS:-}"
 
+# static gates first: repro-lint (always — stdlib only) and ruff
+# (when installed; requirements-dev has it, the bare image may not)
+python scripts/analyze.py
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests scripts benchmarks
+fi
+
 if [ "${TEST_LANE:-fast}" = "full" ]; then
     exec python -m pytest -x -q "$@"
 fi

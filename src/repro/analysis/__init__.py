@@ -1,0 +1,24 @@
+"""repro-lint: AST/CFG static analysis for the serving stack's invariants.
+
+The serving simulator's credibility rests on hand-maintained disciplines
+— reservation pairing, virtual-clock purity, per-channel byte accounting
+— that ``trace.reconcile()`` can only audit on paths a test happens to
+execute. This package proves them on EVERY path, before any test runs
+(DESIGN.md SS18):
+
+* :mod:`repro.analysis.cfg` — intra-procedural control-flow graphs over
+  Python AST, with exception edges, loop back edges, and path walks.
+* :mod:`repro.analysis.core` — project loading, call-name resolution,
+  ``# repro: allow(<rule>): why`` suppression pragmas, finding
+  fingerprints and the committed-baseline workflow.
+* :mod:`repro.analysis.checkers` — the five repo-specific checkers:
+  resource pairing, host-sync/wall-clock discipline, traced-code purity,
+  accounting completeness, and config/CLI drift.
+
+Entry point: ``scripts/analyze.py`` (human + ``--json`` output, nonzero
+exit on findings not covered by the baseline).
+"""
+from repro.analysis.core import (Finding, Project, load_project,
+                                 run_checkers)
+
+__all__ = ["Finding", "Project", "load_project", "run_checkers"]

@@ -1,0 +1,21 @@
+"""The five repo-specific checkers (DESIGN.md SS18).
+
+Each module exposes ``check(project) -> list[Finding]``; ``ALL_CHECKERS``
+is the ordered registry ``scripts/analyze.py`` and the tests run.
+"""
+from repro.analysis.checkers.accounting import check as check_accounting
+from repro.analysis.checkers.config_drift import check as check_config_drift
+from repro.analysis.checkers.host_sync import check as check_host_sync
+from repro.analysis.checkers.purity import check as check_purity
+from repro.analysis.checkers.resource import check as check_resource
+
+ALL_CHECKERS = (
+    check_resource,
+    check_host_sync,
+    check_purity,
+    check_accounting,
+    check_config_drift,
+)
+
+__all__ = ["ALL_CHECKERS", "check_resource", "check_host_sync",
+           "check_purity", "check_accounting", "check_config_drift"]

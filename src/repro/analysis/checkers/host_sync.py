@@ -1,0 +1,225 @@
+"""Checker 2 — host-sync discipline + wall-clock ban.
+
+Rule ``host-sync``: inside ``serving/``, every device->host
+synchronization site — ``.block_until_ready()``, ``jax.device_get``,
+``.item()``, or ``np.asarray`` applied to a device value — must sit
+within a few CFG statements of a ``host_syncs`` counter update, so
+``ServeStats.host_syncs`` ("device->host round-trips taken") stays an
+exact count, which the fused-decode sync-bound tests and the paper's
+one-sync-per-block claim both lean on.
+
+Device values are tracked by a per-function taint pass seeded at calls
+to the class's jitted callables (``self._prefill = jax.jit(...)`` style
+assignments collected per class): anything computed from a jitted
+result is device-resident until ``np.asarray`` pulls it to the host.
+``np.asarray`` over plain host data (hash digests, latency lists) is
+NOT a sync and is never flagged.
+
+Rule ``wall-clock``: virtual-time modules must not read the wall clock
+— ``time.time``/``time.monotonic``/``datetime.now``-style calls are
+banned everywhere under ``repro/`` except ``launch/dryrun.py`` (the
+compile-latency harness, which measures real wall time on purpose).
+``time.perf_counter`` stays legal: it is the measured-kernel-wall basis
+the virtual clock is built FROM (DESIGN.md SS13).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.cfg import build_cfg
+from repro.analysis.core import (Finding, FunctionInfo, ModuleInfo, Project,
+                                 attr_chain, call_name, stmt_calls)
+
+RULE = "host-sync"
+WALL_RULE = "wall-clock"
+SCOPE = "repro/serving/"
+WALL_ALLOWLIST = ("repro/launch/dryrun.py",)
+
+# how many CFG statements away an increment may sit from its sync site
+ADJACENCY = 12
+
+_WALL_BANNED: Tuple[Tuple[str, ...], ...] = (
+    ("time", "time"), ("time", "monotonic"), ("time", "monotonic_ns"),
+    ("time", "localtime"), ("time", "gmtime"), ("time", "ctime"),
+    ("time", "strftime"), ("datetime", "now"), ("datetime", "utcnow"),
+    ("datetime", "today"), ("date", "today"),
+)
+
+
+def _jitted_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attribute names assigned from ``jax.jit(...)`` in any method:
+    ``self._prefill = jax.jit(partial(...))`` -> ``{"_prefill"}``."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and call_name(node.value) == "jit"):
+            continue
+        for tgt in node.targets:
+            chain = attr_chain(tgt)
+            if len(chain) == 2 and chain[0] == "self":
+                out.add(chain[1])
+    return out
+
+
+def _is_np_asarray(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    return (len(chain) == 2 and chain[0] in ("np", "numpy")
+            and chain[1] in ("asarray", "array"))
+
+
+class _Taint:
+    """Flow-insensitive device-value taint within one function."""
+
+    def __init__(self, jitted: Set[str]):
+        self.jitted = jitted
+        self.names: Set[str] = set()
+
+    def device(self, expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Call):
+            chain = attr_chain(expr.func)
+            if (len(chain) == 2 and chain[0] == "self"
+                    and chain[1] in self.jitted):
+                return True
+            if _is_np_asarray(expr):
+                return False          # the pull itself lands on the host
+            return any(self.device(a) for a in expr.args) or any(
+                kw.value is not None and self.device(kw.value)
+                for kw in expr.keywords)
+        if isinstance(expr, ast.Name):
+            return expr.id in self.names
+        return any(self.device(c) for c in ast.iter_child_nodes(expr)
+                   if isinstance(c, ast.expr))
+
+    def run(self, fn: ast.FunctionDef) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    val, tgts = node.value, node.targets
+                elif isinstance(node, ast.AugAssign):
+                    val, tgts = node.value, [node.target]
+                else:
+                    continue
+                if not self.device(val):
+                    continue
+                for tgt in tgts:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name) \
+                                and n.id not in self.names:
+                            self.names.add(n.id)
+                            changed = True
+
+
+def _sync_calls(stmt: ast.stmt, taint: _Taint) -> List[Tuple[ast.Call, str]]:
+    out = []
+    for c in stmt_calls(stmt):
+        name = call_name(c)
+        chain = attr_chain(c.func)
+        if name == "block_until_ready":
+            out.append((c, "block_until_ready()"))
+        elif chain[-2:] == ["jax", "device_get"] or chain == ["device_get"]:
+            out.append((c, "jax.device_get"))
+        elif name == "item" and len(chain) >= 2:
+            out.append((c, ".item()"))
+        elif _is_np_asarray(c) and c.args and taint.device(c.args[0]):
+            out.append((c, "np.asarray(<device value>)"))
+    return out
+
+
+def _is_increment(stmt: ast.stmt) -> bool:
+    tgts: List[ast.expr] = []
+    if isinstance(stmt, ast.AugAssign):
+        tgts = [stmt.target]
+    elif isinstance(stmt, ast.Assign):
+        tgts = list(stmt.targets)
+    for tgt in tgts:
+        chain = attr_chain(tgt)
+        if chain and chain[-1] == "host_syncs":
+            return True
+    return False
+
+
+def _check_function(mod: ModuleInfo, info: FunctionInfo,
+                    jitted: Set[str]) -> List[Finding]:
+    fn = info.node
+    src = ast.dump(fn)  # cheap pre-filter
+    if ("block_until_ready" not in src and "device_get" not in src
+            and "asarray" not in src and "'item'" not in src):
+        return []
+    taint = _Taint(jitted)
+    taint.run(fn)
+    cfg = build_cfg(fn)
+    sync_nodes: List[Tuple[int, ast.stmt, str]] = []
+    incr_nodes: Set[int] = set()
+    for node in cfg.stmt_nodes():
+        if _is_increment(node.stmt):
+            incr_nodes.add(node.idx)
+        for _, what in _sync_calls(node.stmt, taint):
+            sync_nodes.append((node.idx, node.stmt, what))
+
+    out: List[Finding] = []
+    for idx, stmt, what in sync_nodes:
+        if idx in incr_nodes:
+            continue
+        # undirected BFS: an increment within ADJACENCY statements in
+        # either flow direction counts as "adjacent"
+        seen = {idx}
+        frontier = {idx}
+        found = False
+        for _ in range(ADJACENCY):
+            nxt = set()
+            for u in frontier:
+                for v, _k in cfg.succ[u]:
+                    nxt.add(v)
+                for v, _k in cfg.pred[u]:
+                    nxt.add(v)
+            nxt -= seen
+            if nxt & incr_nodes:
+                found = True
+                break
+            seen |= nxt
+            frontier = nxt
+            if not frontier:
+                break
+        if not found:
+            out.append(Finding(
+                RULE, mod.rel, stmt.lineno, info.qualname,
+                f"device sync {what} has no host_syncs accounting within "
+                f"{ADJACENCY} statements"))
+    return out
+
+
+def _wall_clock(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in project.modules:
+        if mod.rel in WALL_ALLOWLIST:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = tuple(attr_chain(node.func))
+            if any(chain[-len(b):] == b for b in _WALL_BANNED if chain):
+                qual = "<module>"
+                out.append(Finding(
+                    WALL_RULE, mod.rel, node.lineno, qual,
+                    f"wall-clock call {'.'.join(chain)}() in a "
+                    f"virtual-time module (allowlist: "
+                    f"{', '.join(WALL_ALLOWLIST)})"))
+    return out
+
+
+def check(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in project.in_dir(SCOPE):
+        jit_by_class: Dict[Optional[ast.ClassDef], Set[str]] = {}
+        for info in mod.functions:
+            cls = info.cls
+            if cls not in jit_by_class:
+                jit_by_class[cls] = _jitted_attrs(cls) if cls else set()
+            out.extend(_check_function(mod, info, jit_by_class[cls]))
+    out.extend(_wall_clock(project))
+    return out

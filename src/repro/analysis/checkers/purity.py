@@ -1,0 +1,381 @@
+"""Checker 3 — traced-code purity (rule ``traced-purity``).
+
+Functions handed to ``jax.jit`` / ``lax.scan`` / ``shard_map`` /
+``pl.pallas_call`` execute under tracing: Python-level randomness,
+wall-clock reads, printing, I/O, or host branching on traced values
+either breaks (concretization errors) or — worse — silently bakes a
+trace-time constant into the compiled program. This checker resolves
+each staged callable (through ``functools.partial``, ``jax.checkpoint``,
+``jax.vmap`` wrappers, local defs, lambdas, and one ``from repro.x
+import y`` re-export hop) and walks its body, plus repo-local callees a
+few levels deep, for:
+
+* banned host calls — ``random.*``, ``np.random.*``, ``time.*``,
+  ``datetime.*``, ``print``, ``open``, ``input``, ``.item()``,
+  ``.block_until_ready()``, and ``np.asarray``/``np.array`` over traced
+  values (``jnp`` stays legal, as does ``jax.random``);
+* host branching — an ``if``/``while`` condition reading a *traced*
+  parameter directly. Static arguments (bound by ``partial`` or named in
+  ``static_argnames``/``static_argnums``), ``is None`` tests, and
+  shape/dtype/len/isinstance inspection are all legal host control flow.
+
+Pallas ``index_map`` lambdas (in ``BlockSpec`` /
+``PrefetchScalarGridSpec``) must be side-effect-free: arithmetic,
+subscripts and ``pl.*`` helpers only.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, ModuleInfo, Project, attr_chain,
+                                 call_name)
+
+RULE = "traced-purity"
+SCOPE = "repro/"
+
+_WRAPPERS = {"checkpoint", "remat", "vmap", "custom_vjp", "named_call"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_PURE_INDEX_ROOTS = {"pl", "pltpu", "min", "max", "abs", "divmod", "int",
+                     "sum", "len"}
+_TRANSITIVE_DEPTH = 5
+
+
+def _const_str_items(node: ast.expr) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return out
+    return []
+
+
+@dataclass
+class _Resolved:
+    mod: ModuleInfo
+    fn: ast.AST                      # FunctionDef or Lambda
+    qualname: str
+    bound_pos: int = 0               # leading params bound by partial
+    bound_kw: Set[str] = field(default_factory=set)
+    static_names: Set[str] = field(default_factory=set)
+    static_nums: Set[int] = field(default_factory=set)
+
+    def traced_params(self) -> Set[str]:
+        args = self.fn.args
+        names = [a.arg for a in args.args]
+        traced: Set[str] = set()
+        for i, name in enumerate(names):
+            if i < self.bound_pos:
+                continue
+            if name in self.bound_kw or name in self.static_names:
+                continue
+            if i in self.static_nums:
+                continue
+            if name in ("self", "cls"):
+                continue
+            traced.add(name)
+        # kwonly params are static when bound/named, else traced
+        for a in args.kwonlyargs:
+            if a.arg not in self.bound_kw \
+                    and a.arg not in self.static_names:
+                traced.add(a.arg)
+        return traced
+
+
+class _Resolver:
+    def __init__(self, project: Project):
+        self.project = project
+
+    def local_def(self, mod: ModuleInfo, name: str,
+                  near: Optional[str]) -> Optional[Tuple[ModuleInfo,
+                                                         ast.FunctionDef,
+                                                         str]]:
+        """Find a def named ``name`` in ``mod``, preferring one nested
+        inside the function ``near`` (the staging site's scope)."""
+        cands = [f for f in mod.functions if f.node.name == name]
+        if not cands:
+            resolved = self.project.resolve_import(mod, name)
+            if resolved is None:
+                return None
+            mod2, node = resolved
+            if not isinstance(node, ast.FunctionDef):
+                return None
+            return mod2, node, node.name
+        if near:
+            nested = [f for f in cands if f.qualname.startswith(near + ".")]
+            if nested:
+                return mod, nested[0].node, nested[0].qualname
+        return mod, cands[0].node, cands[0].qualname
+
+    def resolve(self, mod: ModuleInfo, expr: ast.expr, near: Optional[str],
+                static_names: Set[str], static_nums: Set[int]
+                ) -> Optional[_Resolved]:
+        bound_pos = 0
+        bound_kw: Set[str] = set()
+        while isinstance(expr, ast.Call):
+            cname = call_name(expr)
+            if cname == "partial":
+                if not expr.args:
+                    return None
+                bound_pos += len(expr.args) - 1
+                bound_kw |= {kw.arg for kw in expr.keywords
+                             if kw.arg is not None}
+                expr = expr.args[0]
+            elif cname in _WRAPPERS:
+                if not expr.args:
+                    return None
+                expr = expr.args[0]
+            else:
+                return None
+        if isinstance(expr, ast.Lambda):
+            return _Resolved(mod, expr, "<lambda>", bound_pos, bound_kw,
+                             static_names, static_nums)
+        chain = attr_chain(expr)
+        if not chain:
+            return None
+        if len(chain) == 1:
+            hit = self.local_def(mod, chain[0], near)
+        elif len(chain) == 2 and chain[0] not in ("self", "cls"):
+            # module-attribute reference like ``sampling.sample``
+            hit = self._module_member(mod, chain[0], chain[1])
+        else:
+            return None
+        if hit is None:
+            return None
+        mod2, node, qual = hit
+        return _Resolved(mod2, node, qual, bound_pos, bound_kw,
+                         static_names, static_nums)
+
+    def _module_member(self, mod: ModuleInfo, alias: str, member: str
+                       ) -> Optional[Tuple[ModuleInfo, ast.FunctionDef,
+                                           str]]:
+        """Resolve ``alias.member`` where ``alias`` was imported via
+        ``from repro.pkg import alias`` (a submodule import)."""
+        for node in mod.tree.body:
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if (a.asname or a.name) == alias:
+                        target = self.project._module_for(
+                            f"{node.module}.{a.name}", mod, node.level)
+                        if target is None:
+                            continue
+                        for f in target.functions:
+                            if f.qualname == member:
+                                return target, f.node, f.qualname
+        return None
+
+
+def _banned_call(call: ast.Call, traced: Set[str]) -> Optional[str]:
+    chain = attr_chain(call.func)
+    if not chain:
+        return None
+    root = chain[0]
+    if root == "random" and len(chain) > 1:
+        return f"host randomness {'.'.join(chain)}()"
+    if root in ("np", "numpy") and len(chain) > 2 \
+            and chain[1] == "random":
+        return f"host randomness {'.'.join(chain)}()"
+    if root == "time":
+        return f"wall clock {'.'.join(chain)}() baked in at trace time"
+    if root == "datetime" and len(chain) > 1:
+        return f"wall clock {'.'.join(chain)}()"
+    if chain == ["print"]:
+        return "print() traced as a side effect"
+    if chain in (["open"], ["input"]):
+        return f"host I/O {chain[0]}()"
+    if chain[-1] == "block_until_ready":
+        return "block_until_ready() inside traced code"
+    if chain[-1] == "item" and len(chain) >= 2:
+        return ".item() forces a host sync inside traced code"
+    if root in ("np", "numpy") and chain[-1] in ("asarray", "array"):
+        for a in call.args:
+            for n in ast.walk(a):
+                if isinstance(n, ast.Name) and n.id in traced:
+                    return (f"np.{chain[-1]}() pulls traced value "
+                            f"'{n.id}' to the host")
+    return None
+
+
+def _cond_violations(cond: ast.expr, traced: Set[str]) -> List[str]:
+    """Traced names driving host control flow, minus the legal idioms."""
+    allowed: Set[int] = set()
+
+    def mark_allowed(node: ast.AST) -> None:
+        for n in ast.walk(node):
+            allowed.add(id(n))
+
+    for node in ast.walk(cond):
+        if isinstance(node, ast.Compare):
+            ops_none = all(isinstance(op, (ast.Is, ast.IsNot))
+                           for op in node.ops)
+            cmps_none = all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators)
+            if ops_none and cmps_none:
+                mark_allowed(node)
+        elif isinstance(node, ast.Attribute) \
+                and node.attr in _SHAPE_ATTRS:
+            mark_allowed(node)
+        elif isinstance(node, ast.Call) \
+                and call_name(node) in ("len", "isinstance", "getattr",
+                                        "hasattr"):
+            mark_allowed(node)
+
+    bad = []
+    for n in ast.walk(cond):
+        if isinstance(n, ast.Name) and n.id in traced \
+                and id(n) not in allowed:
+            bad.append(n.id)
+    return sorted(set(bad))
+
+
+def _walk_body(res: _Resolved, resolver: _Resolver,
+               visited: Set[Tuple[str, str]], depth: int,
+               top: bool) -> List[Finding]:
+    """Banned-call scan (transitive); host-branching scan (top level,
+    where the traced-parameter set is actually known)."""
+    key = (res.mod.rel, res.qualname)
+    if key in visited or depth > _TRANSITIVE_DEPTH:
+        return []
+    visited.add(key)
+    traced = res.traced_params() if not isinstance(res.fn, ast.Lambda) \
+        else {a.arg for a in res.fn.args.args}
+    out: List[Finding] = []
+    body = res.fn.body if isinstance(res.fn, ast.FunctionDef) \
+        else [ast.Expr(res.fn.body)]
+
+    def walk(node: ast.AST, in_nested: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            nested = in_nested or isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            if isinstance(child, ast.Call):
+                why = _banned_call(child, traced if not in_nested
+                                   else set())
+                if why is not None:
+                    out.append(Finding(
+                        RULE, res.mod.rel, child.lineno, res.qualname,
+                        f"{why} (staged into jit/scan/pallas)"))
+                elif not in_nested:
+                    # descend into repo-local callees for banned calls
+                    chain = attr_chain(child.func)
+                    if len(chain) == 1:
+                        hit = resolver.local_def(res.mod, chain[0],
+                                                 res.qualname)
+                        if hit is not None:
+                            sub = _Resolved(hit[0], hit[1], hit[2])
+                            out.extend(_walk_body(
+                                sub, resolver, visited, depth + 1,
+                                top=False))
+            if top and not nested and isinstance(child,
+                                                 (ast.If, ast.While)):
+                for name in _cond_violations(child.test, traced):
+                    out.append(Finding(
+                        RULE, res.mod.rel, child.lineno, res.qualname,
+                        f"traced parameter '{name}' drives host control "
+                        f"flow (if/while on a traced value)"))
+            walk(child, nested)
+
+    for stmt in body:
+        walk(stmt, False)
+        if top and isinstance(stmt, (ast.If, ast.While)):
+            for name in _cond_violations(stmt.test, traced):
+                out.append(Finding(
+                    RULE, res.mod.rel, stmt.lineno, res.qualname,
+                    f"traced parameter '{name}' drives host control "
+                    f"flow (if/while on a traced value)"))
+    return out
+
+
+def _index_map_findings(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if call_name(node) not in ("BlockSpec", "PrefetchScalarGridSpec"):
+            continue
+        lambdas: List[ast.Lambda] = []
+        for a in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(a, ast.Lambda):
+                lambdas.append(a)
+        for lam in lambdas:
+            for n in ast.walk(lam.body):
+                if isinstance(n, ast.Call):
+                    chain = attr_chain(n.func)
+                    if not chain or chain[0] not in _PURE_INDEX_ROOTS:
+                        name = ".".join(chain) or "<expr>"
+                        out.append(Finding(
+                            RULE, mod.rel, lam.lineno, "<index_map>",
+                            f"Pallas index_map calls {name}(); index "
+                            f"maps must be side-effect-free arithmetic"))
+                elif isinstance(n, ast.NamedExpr):
+                    out.append(Finding(
+                        RULE, mod.rel, lam.lineno, "<index_map>",
+                        "Pallas index_map contains an assignment "
+                        "expression"))
+    return out
+
+
+def _entry_sites(mod: ModuleInfo) -> List[Tuple[ast.Call, Optional[str],
+                                                str]]:
+    """(call, enclosing-qualname, kind) for every staging call."""
+    encl: Dict[int, str] = {}
+    for f in mod.functions:
+        for n in ast.walk(f.node):
+            encl.setdefault(id(n), f.qualname)
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        name = chain[-1] if chain else ""
+        if name == "jit" and (len(chain) == 1 or chain[0] == "jax"):
+            out.append((node, encl.get(id(node)), "jit"))
+        elif name == "scan" and len(chain) >= 2 and chain[-2] == "lax":
+            out.append((node, encl.get(id(node)), "scan"))
+        elif name in ("shard_map", "_shard_map"):
+            out.append((node, encl.get(id(node)), "shard_map"))
+        elif name == "pallas_call":
+            out.append((node, encl.get(id(node)), "pallas"))
+    return out
+
+
+def check(project: Project) -> List[Finding]:
+    resolver = _Resolver(project)
+    out: List[Finding] = []
+    for mod in project.in_dir(SCOPE):
+        out.extend(_index_map_findings(mod))
+        for call, near, kind in _entry_sites(mod):
+            if not call.args:
+                continue
+            static_names: Set[str] = set()
+            static_nums: Set[int] = set()
+            if kind == "jit":
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        static_names |= set(_const_str_items(kw.value))
+                    elif kw.arg == "static_argnums" and isinstance(
+                            kw.value, (ast.Tuple, ast.List)):
+                        static_nums |= {
+                            e.value for e in kw.value.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)}
+            target = call.args[0]
+            if kind == "scan" and isinstance(target, ast.Call) \
+                    and call_name(target) in _WRAPPERS and target.args:
+                target = target.args[0]
+            res = resolver.resolve(mod, target, near, static_names,
+                                   static_nums)
+            if res is None:
+                continue
+            out.extend(_walk_body(res, resolver, set(), 0, top=True))
+    # dedup (the same body may be staged from several sites)
+    seen: Set[str] = set()
+    uniq: List[Finding] = []
+    for f in out:
+        if f.fingerprint not in seen:
+            seen.add(f.fingerprint)
+            uniq.append(f)
+    return uniq

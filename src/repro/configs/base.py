@@ -8,7 +8,7 @@ One ``ArchConfig`` describes a model family member precisely enough to
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

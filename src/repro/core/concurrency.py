@@ -15,7 +15,7 @@ produced, instead of the greedy capacity_aware split.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig

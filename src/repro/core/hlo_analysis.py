@@ -14,7 +14,6 @@ All values are PER-DEVICE (post-partitioning shapes).
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -233,8 +232,6 @@ def _fusion_bytes(fused: Computation, caller: Computation, ins: Instr,
     param_of: Dict[str, int] = {}
     for i, fins in enumerate(fused.instrs):
         if fins.op == "parameter":
-            m = re.search(r"parameter\((\d+)\)",
-                          f"{fins.op}({','.join(fins.operand_types)})")
             idx = int(fins.operand_types[0]) if fins.operand_types and \
                 fins.operand_types[0].isdigit() else len(param_of)
             param_of[fins.name] = idx

@@ -9,7 +9,7 @@ proposal evaluated under a real capacity constraint (beyond-paper).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 from repro.core.memspec import MemoryHierarchy
 from repro.core.workload import TC

@@ -16,14 +16,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.memspec import MemoryHierarchy
 from repro.core.placement import Placement, capacity_aware
 from repro.core.tiling import gemm_tiling
-from repro.core.workload import (Kernel, Phase, TC, decode_phase,
-                                 prefill_phase, resident_bytes)
+from repro.core.workload import (Kernel, Phase, decode_phase, prefill_phase,
+                                 resident_bytes)
 
 
 @dataclass

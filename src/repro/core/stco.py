@@ -7,12 +7,12 @@ asked programmatically).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.memspec import MemoryHierarchy, hbs, lpddr6, npu_hierarchy
 from repro.core.placement import Placement
-from repro.core.roofline import InferenceReport, run_inference
+from repro.core.roofline import run_inference
 
 
 @dataclass(frozen=True)

@@ -8,7 +8,6 @@ headroom between the XLA graph and a Pallas-kernel implementation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
 from repro.configs.base import ArchConfig
 from repro.core.hlo_analysis import HloCosts

@@ -8,8 +8,7 @@ placement policies (paper Sec. III) can route each class to a memory tier.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.configs.base import ArchConfig

@@ -9,7 +9,6 @@ micro-step routes to the same kernel.
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional
 

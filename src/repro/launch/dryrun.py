@@ -18,7 +18,6 @@ import argparse
 import gc
 import json
 import pathlib
-import sys
 import time
 import traceback
 from functools import partial
@@ -29,7 +28,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import hlo_analysis
-from repro.core.memspec import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_BF16
 from repro.launch.mesh import make_production_mesh
 from repro.models import (RuntimeOptions, SHAPES, cell_runnable, decode_step,
                           init_cache, init_params, input_specs, prefill,
@@ -160,7 +158,6 @@ def build_cell(arch: str, shape: str, mesh, *, variant: str = "fsdp",
         local_b = max(sp.global_batch // dp, 1)
         n_micro = int(os.environ.get("REPRO_MICROBATCH", "0")) or max(
             1, local_b // 4)
-        grad_specs = p_specs
 
         def train_step(params, opt_state, batch):
             def loss_fn(p, mb):

@@ -6,7 +6,6 @@ jnp arrays), modules are (init_fn, apply_fn) pairs.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

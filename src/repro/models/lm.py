@@ -14,7 +14,7 @@ Public surface (used by launch/serving/tests):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -394,7 +394,6 @@ def _decode_block(lp, x, cfg, opts, cache_layer, pos, *, kind):
 def decode_step(cfg: ArchConfig, params, token, pos, cache,
                 opts: RuntimeOptions = RuntimeOptions()):
     """One new token for every sequence. token: (B,) int32; pos: scalar."""
-    B = token.shape[0]
     x = _embed_tokens(cfg, params, token[:, None], None)
     n_pre, _ = _layer_split(cfg)
     new_head = []
@@ -422,8 +421,6 @@ def prefill(cfg: ArchConfig, params, tokens, cache,
     logits, _, (kv_head, kv_stack) = forward(cfg, params, tokens, opts,
                                              prefix_emb=prefix_emb,
                                              collect_kv=True)
-    cache_dtype = (jnp.dtype(opts.cache_dtype) if opts.cache_dtype
-                   else opts.jdtype)
 
     def fill(buf, val):
         return jax.lax.dynamic_update_slice(
@@ -826,7 +823,6 @@ def _paged_decode_attn(p, x, cfg: ArchConfig, opts: RuntimeOptions,
     quant = "k_scale" in cache_layer
     kp, vp = cache_layer["k"], cache_layer["v"]
     P, ps = kp.shape[0], kp.shape[1]
-    n_pp = page_table.shape[1]
 
     if quant:
         ksc, vsc = cache_layer["k_scale"], cache_layer["v_scale"]

@@ -5,7 +5,6 @@ cache) — see DESIGN.md SSArch-applicability; weight-tier placement applies.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ Arctic-style parallel dense residual (configured via ``MoEConfig``).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

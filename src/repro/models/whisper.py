@@ -5,8 +5,6 @@ arXiv:2212.04356. Cross-KV is computed once per request at prefill.
 """
 from __future__ import annotations
 
-import math
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -191,7 +189,6 @@ def prefill(cfg: ArchConfig, params, tokens, cache, opts, prefix_emb=None):
 
 
 def decode_step(cfg: ArchConfig, params, token, pos, cache, opts):
-    B = token.shape[0]
     x = (params["embed"]["emb"][token][:, None, :]
          + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1)[None])
 

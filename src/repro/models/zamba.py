@@ -9,7 +9,7 @@ Structure: outer scan over sites x inner scan over the site's mamba layers.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -98,7 +98,6 @@ class NGramDraft:
         toks = req.prefill_tokens
         self._extend(req.rid, toks)
         idx = self._idx[req.rid]
-        L = len(toks)
         # iterated rollout: after taking a continuation, re-match the NEW
         # trailing n-gram (context + proposal so far) against the index.
         # A single lookup truncates at the end of context — the latest
@@ -132,6 +131,10 @@ class NGramDraft:
     def drop(self, rid: int) -> None:
         self._idx.pop(rid, None)
         self._seen.pop(rid, None)
+
+    def take_host_syncs(self) -> int:
+        """Prompt lookup never touches the device."""
+        return 0
 
 
 class ModelDraft:
@@ -184,6 +187,7 @@ class ModelDraft:
         self.tracer = None                    # SS15: set by the engine
         self.clock = None
         self._synced: Dict[int, bool] = {}    # rid -> has draft KV
+        self.host_syncs = 0                   # drained by the engine
 
     # ------------------------------------------------------------------ #
     def _admit(self, req: Request) -> None:
@@ -276,6 +280,7 @@ class ModelDraft:
             jnp.asarray(tables), self.cache, n_steps=n_steps,
             done=jnp.asarray(inactive), quota=jnp.asarray(quota))
         blk_np = np.asarray(blk)
+        self.host_syncs += 1       # the propose block's device->host pull
         out: Dict[int, List[int]] = {}
         for i, (req, k) in enumerate(items):
             out[req.rid] = [int(t) for t in blk_np[i, :k]] if k > 0 else []
@@ -286,3 +291,10 @@ class ModelDraft:
     def drop(self, rid: int) -> None:
         if self._synced.pop(rid, None):
             self.kv.free_seq(rid)
+
+    def take_host_syncs(self) -> int:
+        """Return and reset the syncs taken since the last drain; the
+        engine folds them into ``ServeStats.host_syncs`` per spec block."""
+        n = self.host_syncs
+        self.host_syncs = 0
+        return n

@@ -283,9 +283,14 @@ class ServeEngine:
         self._prefill = jax.jit(partial(prefill, cfg, opts=opts))
         self._decode = jax.jit(partial(decode_step, cfg, opts=opts),
                                donate_argnums=(3,))
-        # fused K-step greedy decode over the dense cache (static engine)
+        # fused K-step greedy decode over the dense cache (static engine).
+        # temperature/top_k/top_p are compile-time sampling config — the
+        # body branches on them on the host, so they must be static (a
+        # traced temperature would hit a concretization error)
         self._decode_block = jax.jit(partial(decode_steps, cfg, opts=opts),
-                                     static_argnames=("n_steps",),
+                                     static_argnames=("n_steps",
+                                                      "temperature",
+                                                      "top_k", "top_p"),
                                      donate_argnums=(3,))
         # paged path (continuous scheduler); chunk right-padding needs no
         # reserve headroom — positions past a prompt's pages spill into the
@@ -765,6 +770,9 @@ class ServeEngine:
                         else:
                             tok = int(np.argmax(
                                 np.asarray(logits[0, F - 1 - start])))
+                        # the first-token pull is its own device->host
+                        # round trip, after the chunk's barrier sync
+                        self.stats.host_syncs += 1
                         t_e = emit(req, tok, t1)
                         if finished(req, tok):
                             sched.retire(slot)
@@ -802,6 +810,9 @@ class ServeEngine:
                          for _, req in parts]
                 w0 = time.perf_counter()
                 props = draft.propose_all(items)
+                # a model draft pulls its proposed block to the host; the
+                # n-gram draft is host-only and reports zero
+                self.stats.host_syncs += draft.take_host_syncs()
                 td = dstream.commit(t0, time.perf_counter() - w0)
                 trace.engine_span("spec_propose", t0, td,
                                   {"n_seqs": len(items)}, track="decode")

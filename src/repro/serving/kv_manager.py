@@ -50,10 +50,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.serving.channels import KV_TIER_NAMES, make_label
 
 # tiers a KV page may occupy, preferred (fastest) first; mirrors the
-# placement policies in repro.core.placement
-DEFAULT_KV_TIERS = ("chiplet", "ddr", "hbs")
+# placement policies in repro.core.placement and the channel vocabulary
+# in repro.serving.channels (one table, no drift)
+DEFAULT_KV_TIERS = KV_TIER_NAMES
 
 
 def page_bytes(cfg: ArchConfig, page_size: int, dtype_bytes: int = 2) -> int:
@@ -579,7 +581,7 @@ class PagedKVManager:
               n_bytes: float) -> None:
         if src is None or dst is None or n_bytes <= 0:
             return
-        key = f"{src}->{dst}"
+        key = make_label(src, dst)
         self.channel_bytes[key] = self.channel_bytes.get(key, 0.0) + n_bytes
 
     def _assign_tier(self, page: int) -> None:
@@ -679,13 +681,13 @@ class PagedKVManager:
             self._acct(base, chip, n_promoted * pb)
             if self.chiplet_device is not None:
                 self.chiplet_device.transfer("in", n_promoted * pb, now,
-                                             label=f"{base}->{chip}")
+                                             label=make_label(base, chip))
         if n_demoted:
             self.chiplet_demotions += n_demoted
             self._acct(chip, base, n_demoted * pb)
             if self.chiplet_device is not None:
                 self.chiplet_device.transfer("out", n_demoted * pb, now,
-                                             label=f"{chip}->{base}")
+                                             label=make_label(chip, base))
 
     def plan_residency(self, seq_ids: Sequence[int], now: float
                        ) -> ResidencyPlan:
@@ -759,7 +761,7 @@ class PagedKVManager:
             if self.tier_device is not None and n_spilled:
                 self.tier_device.transfer(
                     "out", n_spilled * pb, now,
-                    label=f"{self._base}->{self._offload}")
+                    label=make_label(self._base, self._offload))
             self.n_spills += n_spilled
             self.spill_bytes += n_spilled * pb
             self.clean_demotions += n_clean
@@ -780,7 +782,7 @@ class PagedKVManager:
         self.n_fetches += len(need)
         self.fetch_bytes += len(need) * pb
         self._acct(self._offload, self._base, len(need) * pb)
-        label = f"{self._offload}->{self._base}"
+        label = make_label(self._offload, self._base)
         if self.tier_device is None:
             dones = [now]
         elif n_slices > 1:

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs.base import ArchConfig
-from repro.data.pipeline import SyntheticTextDataset, for_arch
+from repro.data.pipeline import for_arch
 from repro.models import RuntimeOptions, init_params, train_loss
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 

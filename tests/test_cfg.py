@@ -1,0 +1,410 @@
+"""CFG builder unit tests (repro.analysis.cfg, DESIGN.md SS18).
+
+Structural checks — exception edges, with-blocks, early returns, loops,
+try/finally threading — plus path-walk properties: every ``iter_paths``
+walk terminates, uses each edge at most once per path, and the union of
+walked edges covers every edge reachable from ENTRY. The property test
+runs over a deterministic corpus always, and over hypothesis-generated
+programs when hypothesis is installed.
+"""
+import ast
+import textwrap
+
+import pytest
+
+from repro.analysis.cfg import EXC, FALSE, NORMAL, TRUE, build_cfg
+
+
+def _cfg(src):
+    tree = ast.parse(textwrap.dedent(src))
+    fn = tree.body[0]
+    assert isinstance(fn, ast.FunctionDef)
+    return build_cfg(fn)
+
+
+def _node_at(cfg, line):
+    for n in cfg.stmt_nodes():
+        if n.line == line:
+            return n
+    raise AssertionError(f"no CFG node at line {line}")
+
+
+def _edge_kinds(cfg, src_idx):
+    return sorted(k for _, k in cfg.succ[src_idx])
+
+
+# ----------------------------- basics ---------------------------------- #
+
+def test_straight_line_chains_to_exit():
+    cfg = _cfg("""
+        def f():
+            a = 1
+            b = a + 1
+            return b
+    """)
+    a = _node_at(cfg, 3)
+    b = _node_at(cfg, 4)
+    r = _node_at(cfg, 5)
+    assert (b.idx, NORMAL) in cfg.succ[a.idx]
+    assert (r.idx, NORMAL) in cfg.succ[b.idx]
+    assert (cfg.exit, NORMAL) in cfg.succ[r.idx]
+
+
+def test_if_else_true_false_edges_and_join():
+    cfg = _cfg("""
+        def f(x):
+            if x:
+                a = 1
+            else:
+                a = 2
+            return a
+    """)
+    head = _node_at(cfg, 3)
+    assert _edge_kinds(cfg, head.idx) == sorted([TRUE, FALSE])
+    then = _node_at(cfg, 4)
+    other = _node_at(cfg, 6)
+    ret = _node_at(cfg, 7)
+    assert (ret.idx, NORMAL) in cfg.succ[then.idx]
+    assert (ret.idx, NORMAL) in cfg.succ[other.idx]
+
+
+def test_early_return_skips_tail():
+    cfg = _cfg("""
+        def f(x):
+            if x:
+                return 1
+            y = 2
+            return y
+    """)
+    early = _node_at(cfg, 4)
+    tail = _node_at(cfg, 5)
+    assert (cfg.exit, NORMAL) in cfg.succ[early.idx]
+    # the early return has no edge into the tail
+    assert all(v != tail.idx for v, _ in cfg.succ[early.idx])
+    # but the false branch of the if reaches it
+    head = _node_at(cfg, 3)
+    assert (tail.idx, FALSE) in cfg.succ[head.idx]
+
+
+# ------------------------------ loops ----------------------------------- #
+
+def test_while_loop_back_edge_and_exit():
+    cfg = _cfg("""
+        def f(n):
+            i = 0
+            while i < n:
+                i += 1
+            return i
+    """)
+    head = _node_at(cfg, 4)
+    body = _node_at(cfg, 5)
+    ret = _node_at(cfg, 6)
+    assert (body.idx, TRUE) in cfg.succ[head.idx]
+    assert (ret.idx, FALSE) in cfg.succ[head.idx]
+    # back edge body -> head
+    assert any(v == head.idx for v, k in cfg.succ[body.idx])
+
+
+def test_while_true_has_no_false_edge():
+    cfg = _cfg("""
+        def f():
+            while True:
+                if g():
+                    break
+            return 1
+    """)
+    head = _node_at(cfg, 3)
+    assert FALSE not in _edge_kinds(cfg, head.idx)
+    # break still reaches the statement after the loop
+    brk = _node_at(cfg, 5)
+    ret = _node_at(cfg, 6)
+    assert (ret.idx, NORMAL) in cfg.succ[brk.idx]
+
+
+def test_for_loop_break_continue():
+    cfg = _cfg("""
+        def f(xs):
+            total = 0
+            for x in xs:
+                if x < 0:
+                    continue
+                if x > 9:
+                    break
+                total += x
+            return total
+    """)
+    head = _node_at(cfg, 4)
+    cont = _node_at(cfg, 6)
+    brk = _node_at(cfg, 8)
+    ret = _node_at(cfg, 10)
+    assert any(v == head.idx for v, _ in cfg.succ[cont.idx])
+    assert (ret.idx, NORMAL) in cfg.succ[brk.idx]
+    assert (ret.idx, FALSE) in cfg.succ[head.idx]
+
+
+# --------------------------- with-blocks -------------------------------- #
+
+def test_with_block_threads_body():
+    cfg = _cfg("""
+        def f(p):
+            with open(p) as fh:
+                data = fh.read()
+            return data
+    """)
+    w = _node_at(cfg, 3)
+    body = _node_at(cfg, 4)
+    ret = _node_at(cfg, 5)
+    assert (body.idx, NORMAL) in cfg.succ[w.idx]
+    assert (ret.idx, NORMAL) in cfg.succ[body.idx]
+
+
+# ---------------------- exceptions and finally -------------------------- #
+
+def test_try_body_has_exc_edges_to_handler():
+    cfg = _cfg("""
+        def f():
+            try:
+                risky()
+            except ValueError:
+                fallback()
+            return 1
+    """)
+    risky = _node_at(cfg, 4)
+    handler = _node_at(cfg, 5)       # the `except ValueError:` head
+    fb = _node_at(cfg, 6)
+    assert (handler.idx, EXC) in cfg.succ[risky.idx]
+    assert (fb.idx, NORMAL) in cfg.succ[handler.idx]
+    ret = _node_at(cfg, 7)
+    assert (ret.idx, NORMAL) in cfg.succ[fb.idx]
+
+
+def test_uncaught_raise_goes_to_raise_exit():
+    cfg = _cfg("""
+        def f(x):
+            if x:
+                raise ValueError(x)
+            return 0
+    """)
+    rs = _node_at(cfg, 4)
+    assert any(v == cfg.raise_exit for v, _ in cfg.succ[rs.idx])
+    # a raise never falls through to the next statement
+    ret = _node_at(cfg, 5)
+    assert all(v != ret.idx for v, _ in cfg.succ[rs.idx])
+
+
+def test_handler_chain_unmatched_goes_outward():
+    cfg = _cfg("""
+        def f():
+            try:
+                risky()
+            except KeyError:
+                a()
+            except ValueError:
+                b()
+            return 1
+    """)
+    risky = _node_at(cfg, 4)
+    h1 = _node_at(cfg, 5)
+    h2 = _node_at(cfg, 7)
+    # the try body may land in either handler (type match is dynamic)
+    assert (h1.idx, EXC) in cfg.succ[risky.idx]
+    assert (h2.idx, EXC) in cfg.succ[risky.idx]
+    # and each handler head can escape the function when nothing matches
+    assert (cfg.raise_exit, EXC) in cfg.succ[h1.idx]
+    assert (cfg.raise_exit, EXC) in cfg.succ[h2.idx]
+
+
+def test_finally_runs_on_normal_and_exception_paths():
+    cfg = _cfg("""
+        def f():
+            try:
+                risky()
+            finally:
+                cleanup()
+            return 1
+    """)
+    risky = _node_at(cfg, 4)
+    fin = _node_at(cfg, 6)
+    ret = _node_at(cfg, 7)
+    reach_normal = cfg.reachable([risky.idx])
+    assert fin.idx in reach_normal and ret.idx in reach_normal
+    # the finally tail over-approximates: both the continuation and the
+    # propagating-exception exit are reachable from cleanup()
+    reach_fin = cfg.reachable([fin.idx])
+    assert ret.idx in reach_fin
+
+
+def test_return_inside_try_still_passes_finally():
+    cfg = _cfg("""
+        def f():
+            try:
+                return g()
+            finally:
+                cleanup()
+    """)
+    ret = _node_at(cfg, 4)
+    fin = _node_at(cfg, 6)
+    assert fin.idx in cfg.reachable([ret.idx])
+
+
+# ------------------------- reachable() semantics ------------------------ #
+
+def test_reachable_blocked_cuts_paths():
+    cfg = _cfg("""
+        def f(x):
+            acquire()
+            if x:
+                release()
+            done()
+    """)
+    acq = _node_at(cfg, 3)
+    rel = _node_at(cfg, 5)
+    succs = [v for v, _ in cfg.succ[acq.idx]]
+    # with the release node removed, EXIT is still reachable (the
+    # false branch leaks) — exactly the all_paths violation shape
+    assert cfg.exit in cfg.reachable(succs, blocked={rel.idx})
+
+
+def test_reachable_blocked_full_coverage():
+    cfg = _cfg("""
+        def f(x):
+            acquire()
+            if x:
+                release()
+            else:
+                release()
+            done()
+    """)
+    acq = _node_at(cfg, 3)
+    rels = {_node_at(cfg, 5).idx, _node_at(cfg, 7).idx}
+    succs = [v for v, _ in cfg.succ[acq.idx]]
+    assert cfg.exit not in cfg.reachable(succs, blocked=rels)
+
+
+# -------------------------- path-walk property -------------------------- #
+
+_CORPUS = [
+    """
+    def f(x):
+        if x:
+            return 1
+        return 2
+    """,
+    """
+    def f(xs):
+        t = 0
+        for x in xs:
+            if x < 0:
+                continue
+            if x > 9:
+                break
+            t += x
+        return t
+    """,
+    """
+    def f():
+        try:
+            a()
+        except ValueError:
+            b()
+        except KeyError:
+            c()
+        finally:
+            d()
+        return 1
+    """,
+    """
+    def f(n):
+        i = 0
+        while True:
+            with lock():
+                i += 1
+            if i >= n:
+                break
+        return i
+    """,
+    """
+    def f(x):
+        try:
+            if x:
+                raise ValueError(x)
+            return g()
+        finally:
+            cleanup()
+    """,
+]
+
+
+def _assert_path_properties(cfg):
+    walked_edges = set()
+    n_paths = 0
+    for path in cfg.iter_paths(max_paths=5000):
+        n_paths += 1
+        assert path[0] == cfg.entry
+        seen = set()
+        for u, v in zip(path, path[1:]):
+            assert (u, v) not in seen, "edge used twice on one path"
+            seen.add((u, v))
+        # a path ends at EXIT/RAISE_EXIT, or when every outgoing edge of
+        # its last node was already used (e.g. after a while-True back
+        # edge consumed the only way forward)
+        last = path[-1]
+        assert last in (cfg.exit, cfg.raise_exit) or all(
+            (last, v) in seen for v, _ in cfg.succ[last])
+        walked_edges |= seen
+    assert n_paths >= 1
+    # every edge reachable from ENTRY appears on some walked path
+    reachable = cfg.reachable([cfg.entry])
+    for u, ks in cfg.succ.items():
+        if u not in reachable and u != cfg.entry:
+            continue
+        for v, _ in ks:
+            assert (u, v) in walked_edges, f"edge {u}->{v} never walked"
+
+
+@pytest.mark.parametrize("src", _CORPUS)
+def test_iter_paths_terminates_and_covers_edges(src):
+    _assert_path_properties(_cfg(src))
+
+
+def test_iter_paths_property_random_programs():
+    """Hypothesis sweep over generated nests of if/while/for/try —
+    skipped when hypothesis isn't installed (the deterministic corpus
+    above always runs)."""
+    pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (requirements-dev)")
+    from hypothesis import given, settings, strategies as st
+
+    def gen_block(depth):
+        simple = st.sampled_from(["x = g()", "h(x)", "return x", "raise E()"])
+        if depth == 0:
+            return st.lists(simple, min_size=1, max_size=3)
+
+        sub = gen_block(depth - 1)
+
+        def fmt(body, head, tail=None):
+            lines = [head] + ["    " + ln for ln in body]
+            if tail:
+                lines += tail
+            return lines
+
+        compound = st.one_of(
+            sub.map(lambda b: fmt(b, "if c():")),
+            sub.map(lambda b: fmt(b, "while c():")),
+            sub.map(lambda b: fmt(b, "for i in xs:")),
+            st.tuples(sub, sub).map(lambda bb: fmt(
+                bb[0], "try:",
+                ["except E:"] + ["    " + ln for ln in bb[1]])),
+        )
+        return st.lists(st.one_of(simple.map(lambda s: [s]), compound),
+                        min_size=1, max_size=3).map(
+            lambda blocks: [ln for b in blocks for ln in b])
+
+    @given(gen_block(2))
+    @settings(max_examples=40, deadline=None)
+    def run(body_lines):
+        src = "def f(x, xs):\n" + "\n".join(
+            "    " + ln for ln in body_lines)
+        _assert_path_properties(build_cfg(ast.parse(src).body[0]))
+
+    run()

@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) on the analytical engine's invariants."""
-import math
 
 import pytest
 
@@ -8,11 +7,11 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed "
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
-from repro.core import (all_hbs, ddr_only, hbs, lpddr6, npu_hierarchy,
-                        qkv_in_ddr, run_inference)
+from repro.core import (all_hbs, hbs, lpddr6, npu_hierarchy, qkv_in_ddr,
+                        run_inference)
 from repro.core.roofline import kernel_time, phase_time
 from repro.core.tiling import gemm_tiling
-from repro.core.workload import decode_phase, prefill_phase
+from repro.core.workload import decode_phase
 
 CFG = get_config("llama3.2-1b")          # small -> fast kernel graphs
 DIMS = st.integers(min_value=1, max_value=4096)
@@ -120,7 +119,6 @@ def test_moe_decode_streams_only_topk_experts():
     ph = decode_phase(cfg, 256, 1, 2)
     w_moe = sum(op.bytes * k.count for k in ph.kernels for op in k.operands
                 if op.tclass == "w_moe" and op.role == "B")
-    total_moe_bytes = 0
     from repro.core.workload import resident_bytes
     fp = resident_bytes(cfg, 256, 1, 2)
     # streamed expert weights must be way below resident MoE weights

@@ -203,7 +203,7 @@ def test_append_token_into_shared_page_cows():
 
 
 def test_hypothesis_refcounted_pool_never_leaks():
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     ops = st.lists(st.tuples(st.integers(0, 4), st.integers(0, 7),

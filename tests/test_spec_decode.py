@@ -176,7 +176,7 @@ def test_commit_speculative_hypothesis_trace():
     pages exactly cover the landed extent after every commit_speculative,
     the landed length equals the sum of accepted counts, and no page
     leaks (total used == pages_needed of every live sequence)."""
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=60, deadline=None)

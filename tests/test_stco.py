@@ -1,5 +1,4 @@
 """STCO driver tests: requirement solvers invert the paper's Fig. 1."""
-import pytest
 
 from repro.configs import get_config
 from repro.core import all_hbs, qkv_in_ddr

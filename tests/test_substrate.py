@@ -11,7 +11,7 @@ import pytest
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.configs.reduce import reduced
-from repro.data.pipeline import SyntheticTextDataset, for_arch
+from repro.data.pipeline import SyntheticTextDataset
 from repro.models import RuntimeOptions, init_params
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from repro.serving import ServeEngine

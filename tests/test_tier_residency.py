@@ -348,7 +348,7 @@ def test_engine_threads_kv_dtype_width():
 # ------------------------ hypothesis trace property --------------------- #
 
 def test_hypothesis_residency_invariants_over_random_traces():
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     ops = st.lists(st.tuples(st.integers(0, 5),      # op kind

@@ -11,9 +11,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.reduce import reduced
-from repro.serving.trace import (DECODE, DRAFT, PHASES, PREFILL, QUEUE,
-                                 RECOMPUTE, STALL, TraceRecorder,
-                                 validate_chrome_trace)
+from repro.serving.trace import (DECODE, DRAFT, PHASES, PREFILL, STALL,
+                                 TraceRecorder, validate_chrome_trace)
 
 
 def _sum_phases(bd):
